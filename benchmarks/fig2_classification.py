@@ -1,0 +1,33 @@
+"""Paper Fig. 2: training-loss / test-accuracy comparison on the four
+multi-class datasets (SENSORLESS, ACOUSTIC, COVTYPE, SEISMIC) with the
+1.69M-param 2-layer MLP, m=4 workers, B=64, tau=8."""
+from __future__ import annotations
+
+import argparse
+
+from repro.apps.classification import run_comparison
+
+DATASETS = ("sensorless", "acoustic", "covtype", "seismic")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="*", default=list(DATASETS))
+    ap.add_argument("--iters", type=int, default=150)
+    ap.add_argument("--hidden", type=int, default=1300)
+    ap.add_argument("--methods", nargs="*", default=None)
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,final_loss,final_test_acc,scalars_per_worker")
+    for ds in args.datasets:
+        res = run_comparison(ds, n_iters=args.iters, hidden=args.hidden,
+                             methods=args.methods)
+        for name, h in res.items():
+            us = 1e6 * h["wall_s"] / args.iters
+            print(f"fig2/{ds}/{name},{us:.1f},{h['final_loss']:.4f},"
+                  f"{h['final_acc']:.3f},"
+                  f"{h['meter']['scalars_sent_per_worker']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp oracle.
+
+On this CPU container interpret-mode timing measures Python dispatch, not
+TPU performance — the number that matters for the roofline is the HBM-bytes
+model printed per kernel (what the fused kernel reads/writes vs the jnp
+path; see kernels/*.py docstrings and EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def timeit(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return 1e6 * (time.perf_counter() - t0) / reps
+
+
+def main():
+    key = jax.random.key(0)
+    print("name,us_per_call,hbm_bytes_kernel,hbm_bytes_jnp")
+
+    # rmsnorm: kernel reads x + writes y; jnp identical (fused either way)
+    x = jax.random.normal(key, (2048, 1024))
+    s = jnp.ones((1024,))
+    nb = x.size * 4 * 2
+    print(f"kern/rmsnorm,{timeit(lambda a, b: ops.rmsnorm(a, b), x, s):.0f},{nb},{nb}")
+
+    # flash attention S=512: kernel never materializes (S,S) probs
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(key, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
+    t = timeit(lambda a, b, c: ops.flash_attention(a, b, c, block_q=128,
+                                                   block_k=128), q, k, v)
+    io = 4 * B * S * H * hd * 4
+    probs = B * H * S * S * 4
+    print(f"kern/flash_attention,{t:.0f},{io},{io + 2 * probs}")
+
+    # selective scan: kernel keeps (di, n) state in VMEM; jnp materializes
+    # (B, S, di, n) twice (deltaA, deltaBu) plus the scanned h
+    B, S, di, n = 2, 256, 256, 16
+    u = jax.random.normal(key, (B, S, di)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (B, S, di))) * 0.1
+    Bm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, n))
+    Cm = jax.random.normal(jax.random.fold_in(key, 5), (B, S, n))
+    A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 6), (di, n)) * 0.2)
+    Dp = jnp.ones((di,))
+    t = timeit(lambda *a: ops.selective_scan(*a, block_d=128, block_s=128),
+               u, dt, Bm, Cm, A, Dp)
+    io = (3 * B * S * di + 2 * B * S * n) * 4
+    state4d = 3 * B * S * di * n * 4
+    print(f"kern/selective_scan,{t:.0f},{io},{io + state4d}")
+
+    # zo perturb: kernel = 1 read + 1 write of x (direction never in HBM);
+    # jnp path additionally writes+reads the direction
+    npar = 1 << 20
+    xx = jax.random.normal(key, (npar,))
+    t = timeit(lambda a: ops.zo_perturb(a, 55, 0.01, 0, block=8192), xx)
+    print(f"kern/zo_perturb,{t:.0f},{npar * 4 * 2},{npar * 4 * 4}")
+
+    # zo reconstruct (m=8): kernel = 1 write; jnp = m reads + m writes
+    m = 8
+    salts = jnp.arange(m, dtype=jnp.uint32)
+    coeffs = jnp.linspace(-1, 1, m, dtype=jnp.float32)
+    t = timeit(lambda s_, c_: ops.zo_reconstruct(npar, s_, c_, 0, block=8192),
+               salts, coeffs)
+    print(f"kern/zo_reconstruct,{t:.0f},{npar * 4},{npar * 4 * 2 * m}")
+
+
+if __name__ == "__main__":
+    main()

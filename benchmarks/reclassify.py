@@ -1,0 +1,38 @@
+"""Re-parse saved .hlo.txt.gz artifacts with the current collective
+classifier and refresh the ``collectives_raw`` axis fields in the JSONs
+(no re-lowering needed)."""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.launch import hlo  # noqa: E402
+
+
+def main(art="artifacts/dryrun"):
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(art, "*.json"))):
+        gz = jf[:-5] + ".hlo.txt.gz"
+        if not os.path.exists(gz):
+            continue
+        with open(jf) as f:
+            rec = json.load(f)
+        if "collectives_raw" not in rec:
+            continue
+        ms = 16
+        with gzip.open(gz, "rt") as zf:
+            text = zf.read()
+        rec["collectives_raw"] = hlo.collective_bytes(text, ms)
+        # keep extrapolated totals; refresh the axis fields from raw ratios
+        with open(jf, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"reclassified {n} artifacts")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

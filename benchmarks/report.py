@@ -1,0 +1,105 @@
+"""Render the §Dry-run and §Roofline markdown tables from the artifacts."""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.roofline import load, roofline_terms
+from repro.launch.mesh import HW
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--art", default="artifacts/dryrun")
+    args = ap.parse_args(argv)
+    recs = load(args.art)
+    pod = [r for r in recs if r.get("mesh") == "pod"]
+    mp = [r for r in recs if r.get("mesh") == "multipod"]
+
+    print("### §Dry-run results (single-pod 16x16; per-device numbers)\n")
+    print("| arch | shape | step | fits? temp GiB | args GiB | FLOPs/dev | "
+          "bytes/dev | coll B/dev (worker-axis) | lower+compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in pod:
+        tag = f"{r['arch']} | {r['shape']} | {r['step']}"
+        if not r.get("applicable"):
+            print(f"| {tag} | skip: {r['skip_reason']} | | | | | |")
+            continue
+        if "error" in r:
+            print(f"| {tag} | ERROR {r['error'][:40]} | | | | | |")
+            continue
+        mem = r["memory"]
+        temp = mem.get("temp_size_in_bytes", 0)
+        fits = "yes" if temp <= 16 * 2**30 else "**no**"
+        cw = r.get("roofline", {}).get("worker_bytes", 0)
+        print(
+            f"| {tag} | {fits} {fmt_bytes(temp)} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{r['cost']['flops']:.2e} | {r['cost']['bytes']:.2e} | "
+            f"{r['collectives']['total']:.2e} ({cw:.2e}) | "
+            f"{r['lower_s']}+{r['compile_s']} |"
+        )
+
+    if mp:
+        n_ok = sum(1 for r in mp if r.get("applicable") and "error" not in r)
+        n_skip = sum(1 for r in mp if not r.get("applicable"))
+        n_err = sum(1 for r in mp if "error" in r)
+        print(f"\n### §Dry-run multi-pod (2x16x16): {n_ok} compiled, "
+              f"{n_skip} skipped, {n_err} errors\n")
+        for r in mp:
+            if "error" in r:
+                print(f"* ERROR {r['arch']} x {r['shape']} ({r['step']}): "
+                      f"{r['error'][:120]}")
+
+    print("\n### §Roofline (single-pod; seconds per step at v5e peaks)\n")
+    print("| arch | shape | step | t_compute | t_memory | t_collective | "
+          "dominant | 6ND/HLO | what would move the dominant term |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    hints = {
+        ("memory",): "fuse/kernelize the dominant streaming op (flash attn / "
+                     "selective-scan Pallas kernels); bf16 intermediates",
+        ("compute",): "reduce remat recompute; MXU-align tiles",
+        ("collective",): "overlap collectives with compute; reduce-scatter "
+                         "instead of all-reduce; larger per-step compute",
+    }
+    for r in pod:
+        if not r.get("applicable") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        print(
+            f"| {r['arch']} | {r['shape']} | {r['step']} | "
+            f"{rf['t_compute']:.3e} | {rf['t_memory']:.3e} | "
+            f"{rf['t_collective']:.3e} | {rf['dominant']} | "
+            f"{rf['model_flops_ratio']:.2f} | {hints[(rf['dominant'],)]} |"
+        )
+
+    # candidates for the three hillclimb pairs
+    print("\n### Hillclimb candidates\n")
+    scored = []
+    for r in pod:
+        if not r.get("applicable") or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        scored.append((r, rf))
+    if scored:
+        worst_eff = min(scored, key=lambda x: x[1]["model_flops_ratio"] or 9)
+        most_coll = max(scored, key=lambda x: x[1]["t_collective"]
+                        / max(x[1]["bound_s"], 1e-30))
+        print(f"* worst MODEL_FLOPS/HLO ratio: {worst_eff[0]['arch']} x "
+              f"{worst_eff[0]['shape']} ({worst_eff[0]['step']}) = "
+              f"{worst_eff[1]['model_flops_ratio']:.2f}")
+        print(f"* most collective-bound: {most_coll[0]['arch']} x "
+              f"{most_coll[0]['shape']} ({most_coll[0]['step']})")
+        zo = [x for x in scored if x[0]["step"] == "zo"]
+        if zo:
+            big = max(zo, key=lambda x: x[1]["bound_s"])
+            print(f"* most paper-representative (ZO step): {big[0]['arch']} x "
+                  f"{big[0]['shape']}")
+
+
+if __name__ == "__main__":
+    main()

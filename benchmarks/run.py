@@ -1,0 +1,74 @@
+"""Benchmark orchestrator — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
+  table1  — conv-order / comm / compute columns (analytic, Table 1)
+  fig1    — adversarial-example generation (measured, Fig 1 + Table 2)
+  fig2    — multiclass MLP training (measured, Fig 2)
+  kernels — Pallas kernel micro-benches + HBM-byte models
+  roofline— dry-run derived roofline terms (if artifacts exist)
+
+``--quick`` trims iteration counts for CI-speed runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    choices=["table1", "fig1", "fig2", "kernels", "roofline",
+                             "tau"])
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    sections = args.only or ["table1", "kernels", "fig1", "fig2", "tau",
+                             "roofline"]
+    failed = []
+
+    for sec in sections:
+        print(f"\n# === {sec} ===")
+        try:
+            if sec == "table1":
+                from benchmarks import table1
+                table1.main()
+            elif sec == "fig1":
+                from benchmarks import fig1_attack
+                if args.quick:
+                    print("name,us_per_call,final_attack_loss,l2_distortion,success_rate")
+                    for name, r in fig1_attack.run(n_iters=60, verbose=False).items():
+                        print(f"fig1/{name},{r['us_per_call']:.1f},"
+                              f"{r['final_loss']:.4f},{r['l2_all']:.3f},"
+                              f"{r['success_rate']:.2f}")
+                else:
+                    fig1_attack.main()
+            elif sec == "fig2":
+                from benchmarks import fig2_classification
+                argv2 = (["--iters", "30", "--hidden", "128",
+                          "--datasets", "acoustic",
+                          "--methods", "ho_sgd", "sync_sgd", "zo_sgd"]
+                         if args.quick else ["--iters", "60"])
+                fig2_classification.main(argv2)
+            elif sec == "kernels":
+                from benchmarks import kernels_bench
+                kernels_bench.main()
+            elif sec == "tau":
+                from benchmarks import tau_ablation
+                tau_ablation.main(
+                    ["--iters", "40", "--hidden", "128"] if args.quick
+                    else ["--iters", "100"])
+            elif sec == "roofline":
+                from benchmarks import roofline
+                roofline.main([])
+        except Exception:
+            failed.append(sec)
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED sections: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+    print("\n# all benchmark sections completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Paper Table 1: convergence order / communication load / normalized
+computational load per method — analytic columns from core.theory plus
+*measured* per-iteration communication/evaluation counters from the cost
+model wired into every Method."""
+from __future__ import annotations
+
+from repro.core.theory import Problem, table1_row, theorem1_bound
+
+
+def main():
+    # the paper's §5.2 regime: d > 1.69e6, m = 4, B = 64
+    p = Problem(d=1_690_000, m=4, B=64, N=100_000)
+    tau = 8
+    print("name,us_per_call,conv_order,comm_scalars_per_iter,comp_normalized")
+    for meth in ("ho_sgd", "ri_sgd", "sync_sgd", "zo_sgd", "zo_svrg_ave", "qsgd"):
+        row = table1_row(meth, p, tau=tau)
+        print(f"table1/{meth},0.0,{row['conv']:.3e},{row['comm']:.3e},"
+              f"{row['comp']:.3e}")
+    # Theorem 1 bound decomposition at the paper's parameter choices
+    b = theorem1_bound(p, tau)
+    print("# theorem1 terms:", {k: f"{v:.2e}" for k, v in b.items()})
+
+
+if __name__ == "__main__":
+    main()

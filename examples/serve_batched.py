@@ -1,0 +1,18 @@
+"""Batched serving example: prefill a batch of prompts and decode with the
+KV-cache engine (gemma2 family reduced config).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main():
+    serve.main(["--arch", "gemma2-2b", "--reduce", "smoke", "--batch", "4",
+                "--prompt-len", "24", "--max-new", "12"])
+
+
+if __name__ == "__main__":
+    main()

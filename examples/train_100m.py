@@ -1,0 +1,28 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps with
+HO-SGD on the local device mesh (deliverable b's end-to-end example).
+
+    PYTHONPATH=src python examples/train_100m.py --steps 200
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="qwen3-14b")
+    ap.add_argument("--tau", type=int, default=8)
+    args = ap.parse_args()
+    train.main([
+        "--arch", args.arch, "--reduce", "100m", "--steps", str(args.steps),
+        "--tau", str(args.tau), "--batch", "8", "--seq", "256",
+        "--ckpt", "artifacts/ckpt_100m", "--log", "artifacts/train_100m.csv",
+    ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Architecture registry: ``--arch <id>`` ids map to published configs."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401 (re-export)
+    ModelConfig,
+    ShapeConfig,
+    SHAPES,
+    config_for_shape,
+    shape_applicable,
+)
+
+_MODULES = {
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "phi3-mini-3.8b": "repro.configs.phi3_mini_3p8b",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "qwen3-14b": "repro.configs.qwen3_14b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,15 @@
+"""HO-SGD: the paper's contribution (Algorithm 1) and its baselines."""
+from repro.core.ho_sgd import (  # noqa: F401
+    HOSGDConfig,
+    Method,
+    make_ho_sgd,
+    make_sync_sgd,
+    make_zo_sgd,
+    run_method,
+)
+from repro.core.baselines import (  # noqa: F401
+    make_pa_sgd,
+    make_qsgd,
+    make_ri_sgd,
+    make_zo_svrg_ave,
+)

@@ -1,0 +1,200 @@
+"""Baselines the paper compares against (Table 1 / §5).
+
+* PA-SGD — periodic model averaging (McMahan et al. 2016; Wang & Joshi 2018):
+  each worker runs local SGD, models averaged every tau iterations.
+* RI-SGD — redundancy-infused model averaging (Haddadpour et al. 2019):
+  PA-SGD where each worker's shard overlaps a mu_r fraction of its peers'
+  data (emulated at the data layer via ``ri_shard_batch``).
+* ZO-SVRG-Ave — zeroth-order SVRG (Liu et al. 2018): epoch anchor gradient
+  over the full dataset + variance-reduced ZO inner steps.  Requires full
+  dataset storage (the drawback the paper highlights).
+* QSGD — s-level stochastically-quantized gradient SGD (Alistarh et al. 2017).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import directions as D
+from repro.core.ho_sgd import Method, _split_workers
+from repro.core.zo_grad import zo_coefficient
+from repro.opt.optimizers import apply_deltas
+
+
+# --------------------------------------------------------------------------- #
+# PA-SGD / RI-SGD (model averaging)
+# --------------------------------------------------------------------------- #
+def make_pa_sgd(loss_fn, m: int, tau: int, lr: float, name: str = "pa_sgd") -> Method:
+    @jax.jit
+    def local_steps(params_m, batch_m):
+        """One local SGD step per worker (vmapped over the worker dim)."""
+        def one(params, batch):
+            loss, g = jax.value_and_grad(loss_fn)(params, batch)
+            params = jax.tree.map(
+                lambda p, gg: (p.astype(jnp.float32) - lr * gg.astype(jnp.float32)).astype(p.dtype),
+                params, g)
+            return params, loss
+        return jax.vmap(one)(params_m, batch_m)
+
+    @jax.jit
+    def average(params_m):
+        avg = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), 0), params_m)
+        return jax.tree.map(
+            lambda x, a: jnp.broadcast_to(a.astype(x.dtype), x.shape), params_m, avg)
+
+    def init(params):
+        return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m, *p.shape)), params)
+
+    def step(t, params, params_m, batch, key=None):
+        # ``params`` tracks the averaged model; local replicas live in state.
+        batch_m = _split_workers(batch, m)
+        params_m, losses = local_steps(params_m, batch_m)
+        synced = (t + 1) % tau == 0
+        if synced:
+            params_m = average(params_m)
+        params = jax.tree.map(lambda x: x[0], params_m)
+        return params, params_m, {"loss": jnp.mean(losses), "order": 1}
+
+    return Method(
+        name, init, step,
+        comm_scalars=lambda d: d / tau,
+        fevals=lambda d: 0.0,
+        gevals=lambda d: 1.0,
+    )
+
+
+def ri_shard_batch(batch: Any, m: int, mu_r: float, key) -> Any:
+    """Emulate RI-SGD's redundancy: replace a mu_r fraction of each worker's
+    shard with samples drawn from the other workers' shards."""
+    def mix(x):
+        mB = x.shape[0]
+        B = mB // m
+        n_red = int(round(mu_r * B))
+        if n_red == 0:
+            return x
+        xs = x.reshape(m, B, *x.shape[1:])
+        idx = jax.random.randint(key, (m, n_red), 0, mB)
+        foreign = x[idx]  # (m, n_red, ...)
+        return jnp.concatenate([xs[:, : B - n_red], foreign], axis=1).reshape(x.shape)
+    return jax.tree.map(mix, batch)
+
+
+def make_ri_sgd(loss_fn, m: int, tau: int, lr: float, mu_r: float = 0.25) -> Method:
+    base = make_pa_sgd(loss_fn, m, tau, lr, name="ri_sgd")
+
+    def step(t, params, state, batch, key=None):
+        key = key if key is not None else jax.random.key(t)
+        batch = ri_shard_batch(batch, m, mu_r, jax.random.fold_in(key, t))
+        return base.step(t, params, state, batch)
+
+    # RI-SGD stores (1 + mu_r*m) shards per worker -> higher compute/storage
+    return base._replace(
+        step=step, gevals=lambda d: 1.0 + mu_r,  # extra redundant-sample grads
+    )
+
+
+# --------------------------------------------------------------------------- #
+# ZO-SVRG-Ave (Liu et al., 2018)
+# --------------------------------------------------------------------------- #
+def make_zo_svrg_ave(
+    loss_fn, m: int, mu: float, lr: float, dataset: Any,
+    epoch_len: int = 50, seed: int = 0,
+) -> Method:
+    """RandGradEst averaged over m directions; anchor refreshed per epoch."""
+
+    def zo_est(params, batch, t, salt):
+        dim = D.tree_dim(params)
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        f0_keep = jnp.float32(0.0)
+        for i in range(m):
+            v = D.sphere_direction(params, seed + salt, t, jnp.uint32(i))
+            c, f0 = zo_coefficient(loss_fn, params, batch, v, mu, dim)
+            acc = jax.tree.map(lambda a, x: a + c * x.astype(jnp.float32), acc, v)
+            f0_keep = f0
+        return jax.tree.map(lambda a: a / m, acc), f0_keep
+
+    @jax.jit
+    def anchor_grad(params, t):
+        return zo_est(params, dataset, t, salt=7)
+
+    @jax.jit
+    def inner(t, params, anchor_params, g_anchor, batch):
+        g_t, f0 = zo_est(params, batch, t, salt=0)
+        g_a, _ = zo_est(anchor_params, batch, t, salt=0)   # same directions
+        vr = jax.tree.map(lambda a, b, c: a - b + c, g_t, g_a, g_anchor)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype), params, vr)
+        return params, f0
+
+    def init(params):
+        g_anchor, _ = anchor_grad(params, jnp.int32(0))
+        return {"anchor": params, "g_anchor": g_anchor}
+
+    def step(t, params, state, batch, key=None):
+        if t % epoch_len == 0 and t > 0:
+            g_anchor, _ = anchor_grad(params, jnp.int32(t))
+            state = {"anchor": params, "g_anchor": g_anchor}
+        params, f0 = inner(jnp.int32(t), params, state["anchor"],
+                           state["g_anchor"], batch)
+        return params, state, {"loss": f0, "order": 0}
+
+    K = epoch_len
+    return Method(
+        "zo_svrg_ave", init, step,
+        comm_scalars=lambda d: 1.0,
+        fevals=lambda d: 4.0 + 2.0 / K,   # two estimates/step + anchor amortized
+        gevals=lambda d: 0.0,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# QSGD (Alistarh et al., 2017)
+# --------------------------------------------------------------------------- #
+def quantize_qsgd(g: jax.Array, s: int, key) -> jax.Array:
+    """Unbiased s-level stochastic quantization Q_s(g) of one flat vector."""
+    norm = jnp.linalg.norm(g) + 1e-30
+    level = jnp.abs(g) / norm * s
+    lower = jnp.floor(level)
+    prob = level - lower
+    bump = jax.random.bernoulli(key, prob).astype(jnp.float32)
+    return jnp.sign(g) * norm * (lower + bump) / s
+
+
+def make_qsgd(loss_fn, m: int, s: int, lr: float) -> Method:
+    @jax.jit
+    def step_jit(t, params, batch_m, key):
+        def worker_grad(params, batch):
+            return jax.value_and_grad(loss_fn)(params, batch)
+        losses, grads_m = jax.vmap(worker_grad, in_axes=(None, 0))(params, batch_m)
+        leaves, treedef = jax.tree.flatten(grads_m)
+        keys = jax.random.split(key, len(leaves) * m).reshape(len(leaves), m)
+        q = [
+            jax.vmap(lambda gw, kk: quantize_qsgd(gw.reshape(-1), s, kk).reshape(gw.shape))(
+                lf, keys[j]
+            )
+            for j, lf in enumerate(leaves)
+        ]
+        g_mean = jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), 0), jax.tree.unflatten(treedef, q))
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype), params, g_mean)
+        return params, jnp.mean(losses)
+
+    def init(params):
+        return ()
+
+    def step(t, params, state, batch, key=None):
+        key = key if key is not None else jax.random.key(0)
+        batch_m = _split_workers(batch, m)
+        params, loss = step_jit(jnp.int32(t), params, batch_m, jax.random.fold_in(key, t))
+        return params, state, {"loss": loss, "order": 1}
+
+    import math
+    return Method(
+        "qsgd", init, step,
+        comm_scalars=lambda d: (s * s + s * math.sqrt(d)) / 32.0,  # ~bits/32 per Table 1
+        fevals=lambda d: 0.0,
+        gevals=lambda d: 1.0,
+    )

@@ -1,0 +1,131 @@
+"""Pre-shared-seed random direction generation (the paper's §3 trick).
+
+Directions are a *pure function* of ``(seed, iteration, worker, leaf,
+element-position)`` through a counter-based integer hash, so every worker can
+regenerate every other worker's direction without communicating any vector —
+only the pre-shared integer ``seed`` is exchanged once, before optimization.
+
+The same hash is implemented three times, bit-identically:
+  * here (pure jnp)            — reference + distributed optimizer,
+  * kernels/zo_direction.py    — Pallas TPU kernel (on-the-fly, never in HBM),
+  * kernels/ref.py             — oracle used by the kernel tests.
+
+Being elementwise in the *global* flat index, generation is consistent under
+any XLA sharding of the parameter leaf (iota is partitioned correctly).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Plain Python ints (not jnp arrays) so Pallas kernels can use these without
+# capturing traced constants; uint32 arithmetic wraps mod 2**32 as intended.
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+_GOLDEN = np.uint32(0x9E3779B9)
+_SALT2 = np.uint32(0x85EBCA6B)
+_XOR2 = np.uint32(0xC2B2AE35)
+_TWO_PI = 6.283185307179586
+
+
+def mix32(x: jax.Array) -> jax.Array:
+    """Full-avalanche 32-bit integer hash (lowbias32)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def fold(*ints) -> jax.Array:
+    """Combine integers into one uint32 salt (order-sensitive)."""
+    acc = jnp.zeros((), jnp.uint32)
+    for v in ints:
+        acc = mix32(acc ^ (jnp.asarray(v, jnp.uint32) * _GOLDEN))
+    return acc
+
+
+def _uniform01(bits: jax.Array) -> jax.Array:
+    """uint32 -> float32 in (0, 1): top 24 bits, never exactly 0."""
+    return (bits >> 8).astype(jnp.float32) * jnp.float32(2**-24) + jnp.float32(2**-25)
+
+
+def gaussian_from_salt(shape: Tuple[int, ...], salt: jax.Array,
+                       offset: jax.Array | int = 0) -> jax.Array:
+    """Standard-normal array from a counter hash (Box–Muller, cos branch).
+
+    ``offset`` shifts the flat counter so one leaf's elements can be split
+    across calls (used by the Pallas kernel's grid blocks and its oracle).
+
+    The row-major flat index is built from per-dim ``broadcasted_iota``
+    (NOT a flat 1-D iota + reshape): elementwise iotas partition trivially
+    under any sharding, whereas the flat-iota form makes the SPMD
+    partitioner materialize the whole leaf replicated per device before
+    resharding — catastrophic for billion-parameter leaves.
+    """
+    if len(shape) == 0:
+        idx = jnp.asarray(offset, jnp.uint32).reshape(())
+    else:
+        # the counter wraps mod 2**32: leaves with > 4.3e9 elements (arctic's
+        # expert stack) repeat gaussian values every 2**32 positions — a
+        # negligible, documented correlation (the Pallas kernels' uint32
+        # arithmetic wraps identically, keeping all three paths bit-equal)
+        idx = jnp.zeros(shape, jnp.uint32)
+        stride = 1
+        for d in range(len(shape) - 1, -1, -1):
+            if shape[d] > 1:
+                idx = idx + jax.lax.broadcasted_iota(jnp.uint32, shape, d) * np.uint32(stride & 0xFFFFFFFF)
+            stride *= int(shape[d])
+        idx = idx + jnp.asarray(offset, jnp.uint32)
+    h1 = mix32(idx * _GOLDEN + salt)
+    h2 = mix32(idx * _SALT2 + (salt ^ _XOR2))
+    u1 = _uniform01(h1)
+    u2 = _uniform01(h2)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(_TWO_PI * u2)
+
+
+# --------------------------------------------------------------------------- #
+# whole-parameter-tree directions
+# --------------------------------------------------------------------------- #
+def tree_dim(params: Any) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def leaf_salts(params: Any, seed: int, t: jax.Array, worker: jax.Array) -> List[jax.Array]:
+    leaves = jax.tree.leaves(params)
+    return [fold(seed, t, worker, i) for i in range(len(leaves))]
+
+
+def raw_direction(params: Any, seed: int, t, worker) -> Any:
+    """Unnormalized Gaussian direction tree, same structure as ``params``."""
+    leaves, treedef = jax.tree.flatten(params)
+    salts = [fold(seed, t, worker, i) for i in range(len(leaves))]
+    vs = [gaussian_from_salt(x.shape, s) for x, s in zip(leaves, salts)]
+    return jax.tree.unflatten(treedef, vs)
+
+
+def sphere_direction(params: Any, seed: int, t, worker) -> Any:
+    """Uniform-on-the-unit-sphere direction over the whole d-dim tree.
+
+    The norm is a *global* reduction across leaves; under model-axis sharding
+    XLA realizes it as per-shard partial sums + one scalar all-reduce — still
+    O(1) communication, as required by the paper's cost accounting.
+    """
+    v = raw_direction(params, seed, t, worker)
+    sumsq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(v))
+    inv = jax.lax.rsqrt(sumsq + 1e-30)
+    return jax.tree.map(lambda x: x * inv, v)
+
+
+def tree_axpy(a, x_tree, y_tree):
+    """y + a*x, cast back to y's dtypes (params stay in their own dtype)."""
+    return jax.tree.map(
+        lambda x, y: (y.astype(jnp.float32) + a * x.astype(jnp.float32)).astype(y.dtype),
+        x_tree,
+        y_tree,
+    )

@@ -1,0 +1,275 @@
+"""Mesh-distributed HO-SGD: the production implementation of Algorithm 1.
+
+Workers = (pod, data) slices; tensor parallelism on the auto ``model`` axis.
+
+* ``make_fo_step``  — eq. (3): pjit data-parallel first-order step.  The
+  d-dimensional gradient all-reduce over the worker axes is inserted by XLA
+  (this is the expensive collective the paper amortizes over tau).
+* ``make_zo_step``  — eq. (4)-(6): partial-auto ``jax.shard_map`` (manual
+  over worker axes).  Each worker evaluates the loss twice on its local
+  shard, all-gathers **one scalar per worker**, regenerates every worker's
+  direction from the pre-shared seed, and reconstructs the update locally.
+  Inter-worker traffic: 4*m bytes — independent of d.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import directions as D
+from repro.core.ho_sgd import HOSGDConfig
+from repro.dist.sharding import batch_specs, param_specs, worker_axes
+from repro.opt.optimizers import Optimizer, apply_deltas, const_schedule, sgd
+
+
+def _replicated_specs(tree: Any) -> Any:
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def make_fo_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    mesh: Mesh,
+    opt: Optimizer,
+    grad_accum: int = 1,
+    scan_unroll: bool = False,
+) -> Callable:
+    """jit(train_step): (t, params, opt_state, batch) -> (params, state, loss).
+
+    ``grad_accum`` splits the batch into microbatches scanned sequentially
+    with an fp32 gradient accumulator — bounds the backward residual stack
+    (n_layers * tokens_mb * d_model per device) that dominates train memory.
+    """
+
+    def fo_step(t, params, opt_state, batch):
+        if grad_accum <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            # split so the *major* dim stays the (sharded) batch dim, then
+            # transpose: reshape(accum, B/accum, ...) would force GSPMD to
+            # split the data-axis sharding across microbatches (4-way-parallel
+            # microbatches, constant memory); this keeps every device working
+            # on its own rows in every microbatch.
+            mb = jax.tree.map(
+                lambda x: x.reshape(x.shape[0] // grad_accum, grad_accum,
+                                    *x.shape[1:]).swapaxes(0, 1),
+                batch,
+            )
+
+            def micro(carry, batch_i):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(params, batch_i)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            init = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params), jnp.float32(0.0))
+            (grads, loss), _ = jax.lax.scan(
+                micro, init, mb, unroll=grad_accum if scan_unroll else 1)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = loss / grad_accum
+        deltas, opt_state = opt.update(grads, opt_state, params, t)
+        return apply_deltas(params, deltas), opt_state, loss
+
+    return fo_step
+
+
+def make_zo_step(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    mesh: Mesh,
+    ho: HOSGDConfig,
+    opt: Optimizer,
+    m: Optional[int] = None,
+    fsdp: bool = False,
+    param_specs_tree: Any = None,
+) -> Callable:
+    """(t, params, opt_state, batch) -> (params, opt_state, loss).
+
+    The shard_map inner function returns the reconstructed gradient estimate
+    (replicated across workers — every worker computes the same sum); the
+    optimizer update composes outside, so HO-SGD's ZO steps can drive any
+    optimizer (beyond-paper: ZO-Adam).
+
+    With ``fsdp`` params are sharded over the data axis, so a model replica
+    (= the paper's "worker") spans (data, model) and the ZO step runs with
+    m=1 (one global direction per iteration, plain pjit).  Running the pod
+    axis as a manual worker axis is blocked by an XLA SPMD partitioner
+    CHECK-failure when the MoE dispatch gathers meet subgroup-manual
+    sharding (spmd_partitioner_util.cc:504; stack in EXPERIMENTS.md §Dry-run
+    notes) — a real-XLA limitation we document rather than hide.
+    """
+    if fsdp:
+        wa = ()
+    else:
+        wa = worker_axes(mesh)
+    m = m or max(1, int(jnp.prod(jnp.asarray([mesh.shape[a] for a in wa] or [1]))))
+
+    def constrain(tree):
+        """Pin hash-generated direction trees to the params' sharding.
+
+        The directions are pure functions of iota — without a constraint the
+        partitioner is free to replicate them, which materializes the full
+        d-dim vector per device (1.8 TB fp32 for arctic).  Param specs only
+        name auto axes ('model', and 'data' under fsdp where the manual axis
+        is 'pod'), so the same specs apply inside the shard_map body."""
+        if param_specs_tree is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, param_specs_tree)
+
+    # --- fused direction algebra -------------------------------------------
+    # The direction vector v is NEVER materialized as a tree: every use
+    # regenerates the hashed gaussian per leaf and fuses it into the consuming
+    # op (sum-of-squares reduce / perturb add / reconstruction accumulate).
+    # This is the XLA-level analogue of the kernels/zo_direction.py Pallas
+    # kernels (on a real TPU those run the same algebra from VMEM) and is
+    # what keeps the ZO step's memory at O(params), not O(m * params).
+    def _gauss_leaf(x, spec, li, t, worker):
+        g = D.gaussian_from_salt(x.shape, D.fold(ho.seed, t, worker, li))
+        if spec is not None:
+            g = jax.lax.with_sharding_constraint(g, spec)
+        return g
+
+    def _spec_leaves(params):
+        if param_specs_tree is None:
+            return [None] * len(jax.tree.leaves(params))
+        return jax.tree.leaves(
+            param_specs_tree, is_leaf=lambda x: isinstance(x, P))
+
+    def _inv_norm(leaves, specs, t, worker):
+        ssq = sum(
+            jnp.sum(jnp.square(_gauss_leaf(x, s, i, t, worker)))
+            for i, (x, s) in enumerate(zip(leaves, specs))
+        )
+        return jax.lax.rsqrt(ssq + 1e-30)
+
+    def _perturbed(leaves, treedef, specs, t, worker, scale):
+        out = [
+            (x.astype(jnp.float32) + scale * _gauss_leaf(x, s, i, t, worker)
+             ).astype(x.dtype)
+            for i, (x, s) in enumerate(zip(leaves, specs))
+        ]
+        return jax.tree.unflatten(treedef, out)
+
+    def _zo_coeff(t, params, batch_local, worker):
+        """Two function evaluations -> the scalar coefficient c (eq. 4)."""
+        leaves, treedef = jax.tree.flatten(params)
+        specs = _spec_leaves(params)
+        dim = D.tree_dim(params)
+        inv = _inv_norm(leaves, specs, t, worker)
+        f0 = loss_fn(params, batch_local)
+        f1 = loss_fn(
+            _perturbed(leaves, treedef, specs, t, worker, jnp.float32(ho.mu) * inv),
+            batch_local)
+        return ((dim / ho.mu) * (f1 - f0)).astype(jnp.float32), f0
+
+    def _reconstruct(t, params, cs):
+        """(zo_scale/m) * sum_i c_i * v_i, one live accumulator tree."""
+        leaves, treedef = jax.tree.flatten(params)
+        specs = _spec_leaves(params)
+        adt = jnp.dtype(ho.acc_dtype)
+        acc0 = [
+            jnp.zeros(x.shape, adt) if s is None
+            else jax.lax.with_sharding_constraint(jnp.zeros(x.shape, adt), s)
+            for x, s in zip(leaves, specs)
+        ]
+
+        def recon(i, acc):
+            w = i.astype(jnp.uint32)
+            inv = _inv_norm(leaves, specs, t, w)
+            coeff = cs[i] * inv
+            return [
+                (a.astype(jnp.float32)
+                 + coeff * _gauss_leaf(x, s, li, t, w)).astype(adt)
+                for li, (a, x, s) in enumerate(zip(acc, leaves, specs))
+            ]
+
+        acc = jax.lax.fori_loop(0, m, recon, acc0)
+        g = [a.astype(jnp.float32) * (ho.zo_scale / m) for a in acc]
+        return jax.tree.unflatten(treedef, g)
+
+    def zo_inner(t, params, batch_local):
+        # worker id from the manual axes
+        idx = jax.lax.axis_index(wa[0])
+        if len(wa) == 2:
+            idx = idx * mesh.shape[wa[1]] + jax.lax.axis_index(wa[1])
+        c, f0 = _zo_coeff(t, params, batch_local, idx.astype(jnp.uint32))
+        cs = jax.lax.all_gather(c, wa)                    # (m,) scalars — the
+        cs = cs.reshape(-1)                               # paper's entire comm
+        g_hat = _reconstruct(t, params, cs)
+        loss = jax.lax.pmean(f0, wa)
+        return g_hat, loss
+
+    def zo_single(t, params, batch):
+        """m=1 degenerate case (fsdp arch on the single-pod mesh): plain pjit."""
+        c, f0 = _zo_coeff(t, params, batch, jnp.uint32(0))
+        g_hat = _reconstruct(t, params, c.reshape(1))
+        return g_hat, f0
+
+    def zo_step(t, params, opt_state, batch):
+        if not wa:
+            g_hat, loss = zo_single(t, params, batch)
+        else:
+            params_specs = _replicated_specs(params)
+            bspecs = jax.tree.map(
+                lambda x: P(wa, *([None] * (x.ndim - 1))), batch)
+            g_hat, loss = jax.shard_map(
+                partial(zo_inner, t),
+                mesh=mesh,
+                in_specs=(params_specs, bspecs),
+                out_specs=(params_specs, P()),
+                axis_names=set(wa),
+                check_vma=False,
+            )(params, batch)
+        deltas, opt_state = opt.update(g_hat, opt_state, params, t)
+        return apply_deltas(params, deltas), opt_state, loss
+
+    return zo_step
+
+
+def make_distributed_ho_sgd(
+    loss_fn: Callable,
+    mesh: Mesh,
+    ho: HOSGDConfig,
+    opt: Optional[Optimizer] = None,
+    model_cfg=None,
+    params_like: Any = None,
+):
+    """Returns (fo_step, zo_step) honoring the arch's production knobs."""
+    opt = opt or sgd(const_schedule(ho.lr), ho.momentum)
+    ga = getattr(model_cfg, "grad_accum", 1) if model_cfg is not None else 1
+    su = getattr(model_cfg, "scan_unroll", False) if model_cfg is not None else False
+    fsdp = getattr(model_cfg, "fsdp", False) if model_cfg is not None else False
+    specs = None
+    if model_cfg is not None and params_like is not None:
+        specs = param_specs(model_cfg, params_like, mesh)
+    fo = make_fo_step(loss_fn, mesh, opt, grad_accum=ga, scan_unroll=su)
+    zo = make_zo_step(loss_fn, mesh, ho, opt, fsdp=fsdp, param_specs_tree=specs)
+    return fo, zo
+
+
+def jit_with_shardings(step_fn, mesh: Mesh, cfg_model, params, opt_state, batch,
+                       donate: bool = True):
+    """jit a (t, params, opt_state, batch) step with explicit shardings."""
+    pspecs = param_specs(cfg_model, params, mesh)
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda x: isinstance(x, P))
+    o_specs = jax.tree.map(lambda x: NamedSharding(mesh, P()), opt_state) if opt_state is not None else None
+    in_sh = (
+        NamedSharding(mesh, P()),
+        ns(pspecs),
+        o_specs,
+        ns(batch_specs(mesh, batch)),
+    )
+    out_sh = (ns(pspecs), o_specs, NamedSharding(mesh, P()))
+    return jax.jit(
+        step_fn,
+        in_shardings=in_sh,
+        out_shardings=out_sh,
+        donate_argnums=(1, 2) if donate else (),
+    )

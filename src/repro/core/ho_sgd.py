@@ -1,0 +1,199 @@
+"""HO-SGD (Algorithm 1) — the paper's contribution, plus its two endpoints.
+
+This module is the *single-host reference* implementation: the m workers of
+Algorithm 1 are simulated faithfully (worker i uses its own batch shard and
+its own pre-shared-seed direction).  The mesh-distributed implementation with
+identical semantics lives in ``repro.core.distributed`` (partial-auto
+shard_map; scalars move over the (pod, data) axes).
+
+Communication accounting (per worker, per iteration, in scalars):
+  * FO iteration: d              (the gradient vector — all-reduce)
+  * ZO iteration: 1              (the directional-derivative coefficient)
+so a period of tau iterations costs d + (tau-1) scalars — Table 1's
+(tau - 1 + d)/tau per-iteration load.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import directions as D
+from repro.core.zo_grad import zo_coefficient
+from repro.opt.optimizers import Optimizer, apply_deltas, const_schedule, sgd
+
+
+@dataclass(frozen=True)
+class HOSGDConfig:
+    tau: int                 # period of first-order updates (tau=1 -> syncSGD)
+    mu: float = 1e-3         # smoothing parameter
+    m: int = 4               # number of workers
+    seed: int = 0            # the pre-shared seed
+    lr: float = 0.01
+    zo_lr: Optional[float] = None  # ZO-step lr (the estimator's variance is
+    momentum: float = 0.0          # O(d) larger; practice uses ~lr/d — the
+                                   # paper's attack experiment uses 30/d)
+    # dtype of the distributed ZO reconstruction accumulator.  fp32 is the
+    # faithful default; bf16 halves the largest ZO-step resident (the
+    # estimate is O(d)-noisy anyway) — beyond-paper memory lever (§Perf).
+    acc_dtype: str = "float32"
+
+    @property
+    def zo_scale(self) -> float:
+        return 1.0 if self.zo_lr is None else self.zo_lr / self.lr
+
+    @property
+    def is_first_order_only(self) -> bool:
+        return self.tau == 1
+
+
+class Method(NamedTuple):
+    """Uniform optimizer-method interface used by benchmarks and tests."""
+    name: str
+    init: Callable[[Any], Any]                    # params -> state
+    step: Callable[..., tuple]                    # (t, params, state, batch[, key])
+    # analytic per-iteration cost model (scalars / func evals / grad evals):
+    comm_scalars: Callable[[int], float]
+    fevals: Callable[[int], float]
+    gevals: Callable[[int], float]
+
+
+def _split_workers(batch: Any, m: int) -> Any:
+    """(m*B, ...) -> (m, B, ...) on every leaf."""
+    def r(x):
+        assert x.shape[0] % m == 0, f"batch {x.shape} not divisible by m={m}"
+        return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_ho_sgd(
+    loss_fn: Callable[[Any, Any], jax.Array],
+    cfg: HOSGDConfig,
+    opt: Optional[Optimizer] = None,
+    name: str = "ho_sgd",
+) -> Method:
+    opt = opt or sgd(const_schedule(cfg.lr), cfg.momentum)
+
+    @jax.jit
+    def fo_step(t, params, opt_state, batch):
+        """Eq. (3): all workers' first-order grads, averaged (data-parallel)."""
+        flat = jax.tree.map(lambda x: x.reshape(-1, *x.shape[2:]), batch)
+        loss, grads = jax.value_and_grad(loss_fn)(params, flat)
+        deltas, opt_state = opt.update(grads, opt_state, params, t)
+        return apply_deltas(params, deltas), opt_state, loss
+
+    @jax.jit
+    def zo_step(t, params, opt_state, batch):
+        """Eq. (4)-(6): per-worker scalar coefficients, shared reconstruction."""
+        dim = D.tree_dim(params)
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        loss_acc = jnp.float32(0.0)
+        for i in range(cfg.m):  # static unroll: workers are a mesh property
+            batch_i = jax.tree.map(lambda x: x[i], batch)
+            v = D.sphere_direction(params, cfg.seed, t, jnp.uint32(i))
+            c, f0 = zo_coefficient(loss_fn, params, batch_i, v, cfg.mu, dim)
+            acc = jax.tree.map(lambda a, x: a + c * x.astype(jnp.float32), acc, v)
+            loss_acc = loss_acc + f0
+        g_hat = jax.tree.map(lambda a: a * (cfg.zo_scale / cfg.m), acc)
+        deltas, opt_state = opt.update(g_hat, opt_state, params, t)
+        return apply_deltas(params, deltas), opt_state, loss_acc / cfg.m
+
+    def init(params):
+        return opt.init(params)
+
+    def step(t: int, params, state, batch, key=None):
+        batch = _split_workers(batch, cfg.m)
+        if t % cfg.tau == 0:
+            params, state, loss = fo_step(jnp.int32(t), params, state, batch)
+            metrics = {"loss": loss, "order": 1}
+        else:
+            params, state, loss = zo_step(jnp.int32(t), params, state, batch)
+            metrics = {"loss": loss, "order": 0}
+        return params, state, metrics
+
+    def comm_scalars(d: int) -> float:   # amortized per iteration per worker
+        return (d + (cfg.tau - 1)) / cfg.tau
+
+    def fevals(d: int) -> float:         # function evals per iter per worker
+        return 2 * (cfg.tau - 1) / cfg.tau
+
+    def gevals(d: int) -> float:         # first-order grad evals per iter
+        return 1.0 / cfg.tau
+
+    return Method(name, init, step, comm_scalars, fevals, gevals)
+
+
+def make_adaptive_ho_sgd(
+    loss_fn: Callable,
+    cfg: HOSGDConfig,
+    tau_schedule: Callable[[int], int],
+    opt: Optional[Optimizer] = None,
+) -> Method:
+    """Beyond-paper: HO-SGD with a time-varying period tau(t).
+
+    The paper fixes tau; in practice the ZO approximation error matters most
+    late in training (small gradients vs O(d) estimator variance), so a
+    growing-then-capped tau front-loads cheap ZO steps.  ``tau_schedule(t)``
+    returns the current period; an FO step fires whenever the position
+    within the current period wraps.
+    """
+    base = make_ho_sgd(loss_fn, cfg, opt, name="ho_sgd_adaptive")
+    state_holder = {"since_fo": 0}
+
+    def step(t: int, params, state, batch, key=None):
+        tau_t = max(1, int(tau_schedule(t)))
+        if t == 0 or state_holder["since_fo"] + 1 >= tau_t:
+            state_holder["since_fo"] = 0
+            # reuse the base method's FO branch (t=0 always maps to FO)
+            return base.step(0 if t == 0 else cfg.tau * max(t, 1), params,
+                             state, batch, key)
+        state_holder["since_fo"] += 1
+        # any t with t % cfg.tau != 0 runs the ZO branch; keep t for seeds
+        t_zo = t if t % cfg.tau != 0 else t + 1
+        return base.step(t_zo, params, state, batch, key)
+
+    return base._replace(name="ho_sgd_adaptive", step=step)
+
+
+def make_sync_sgd(loss_fn, m: int, lr: float, momentum: float = 0.0) -> Method:
+    """Fully synchronous distributed SGD (Wang & Joshi 2018) = HO-SGD, tau=1."""
+    cfg = HOSGDConfig(tau=1, m=m, lr=lr, momentum=momentum)
+    meth = make_ho_sgd(loss_fn, cfg, name="sync_sgd")
+    return meth._replace(
+        comm_scalars=lambda d: float(d), fevals=lambda d: 0.0, gevals=lambda d: 1.0
+    )
+
+
+def make_zo_sgd(loss_fn, m: int, mu: float, lr: float, seed: int = 0) -> Method:
+    """Distributed ZO-SGD (Sahu et al. 2019) = HO-SGD, tau >= N (never FO)."""
+    cfg = HOSGDConfig(tau=1 << 30, mu=mu, m=m, lr=lr, seed=seed)
+    meth = make_ho_sgd(loss_fn, cfg, name="zo_sgd")
+    return meth._replace(
+        comm_scalars=lambda d: 1.0, fevals=lambda d: 2.0, gevals=lambda d: 0.0
+    )
+
+
+def run_method(
+    method: Method,
+    params: Any,
+    batches,                       # iterable of (m*B, ...) batches
+    n_iters: int,
+    eval_fn: Optional[Callable] = None,
+    eval_every: int = 0,
+    key=None,
+) -> Dict[str, list]:
+    """Simple training loop collecting per-iteration history."""
+    state = method.init(params)
+    hist: Dict[str, list] = {"loss": [], "order": [], "eval": []}
+    it = iter(batches)
+    for t in range(n_iters):
+        batch = next(it)
+        params, state, metrics = method.step(t, params, state, batch, key)
+        hist["loss"].append(float(metrics["loss"]))
+        hist["order"].append(int(metrics["order"]))
+        if eval_fn and eval_every and (t + 1) % eval_every == 0:
+            hist["eval"].append((t + 1, float(eval_fn(params))))
+    hist["params"] = params
+    return hist

@@ -1,0 +1,10 @@
+from repro.data.synthetic import (  # noqa: F401
+    DATASET_SPECS,
+    Dataset,
+    batches,
+    make_classification,
+    make_digits,
+    token_batches,
+)
+from repro.data.libsvm import parse_libsvm, try_load  # noqa: F401
+from repro.data.pipeline import shard_batches, take  # noqa: F401

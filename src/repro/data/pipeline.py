@@ -1,0 +1,45 @@
+"""Device pipeline: shard host batches onto the mesh with double-buffering."""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from typing import Any, Iterator
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist.sharding import batch_specs
+
+
+def shard_batches(
+    host_batches: Iterator[Any],
+    mesh: Mesh,
+    prefetch: int = 2,
+) -> Iterator[Any]:
+    """Async device_put of host batches with a small prefetch queue."""
+    spec_cache = {}
+
+    def put(batch):
+        key = tuple(sorted(jax.tree.map(lambda x: (x.shape, str(x.dtype)), batch).items())) \
+            if isinstance(batch, dict) else None
+        if key not in spec_cache:
+            spec_cache[key] = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), batch_specs(mesh, batch),
+                is_leaf=lambda x: hasattr(x, "index"))
+        return jax.device_put(batch, spec_cache[key])
+
+    queue: deque = deque()
+    it = iter(host_batches)
+    for b in itertools.islice(it, prefetch):
+        queue.append(put(b))
+    while queue:
+        out = queue.popleft()
+        try:
+            queue.append(put(next(it)))
+        except StopIteration:
+            pass
+        yield out
+
+
+def take(it: Iterator[Any], n: int):
+    return itertools.islice(it, n)

@@ -1,0 +1,82 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute in ``interpret=True`` mode (the
+kernel body runs per-block in Python/XLA-CPU); on a real TPU runtime
+``interpret=False`` lowers through Mosaic.  ``INTERPRET`` auto-detects.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.selective_scan import selective_scan_pallas
+from repro.kernels import zo_direction as zo_k
+
+INTERPRET = jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            block_rows: int = 128) -> jax.Array:
+    """Fused RMSNorm over the last dim; any leading shape."""
+    lead = x.shape[:-1]
+    flat = x.reshape(-1, x.shape[-1])
+    rows = flat.shape[0]
+    br = block_rows
+    while rows % br:
+        br //= 2
+    out = rmsnorm_pallas(flat, scale, eps, max(br, 1), interpret=INTERPRET)
+    return out.reshape(*lead, x.shape[-1])
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q", "block_k"))
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, hd)
+    k: jax.Array,            # (B, Sk, KV, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """GQA flash attention; returns (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kh = jnp.repeat(k.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    vh = jnp.repeat(v.transpose(0, 2, 1, 3), rep, axis=1).reshape(B * H, -1, hd)
+    out = flash_attention_pallas(
+        qh, kh, vh, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=INTERPRET,
+    )
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+@partial(jax.jit, static_argnames=("block_d", "block_s"))
+def selective_scan(u, dt, Bmat, Cmat, A, D, block_d: int = 256, block_s: int = 128):
+    return selective_scan_pallas(
+        u, dt, Bmat, Cmat, A, D, block_d=block_d, block_s=block_s,
+        interpret=INTERPRET,
+    )
+
+
+@partial(jax.jit, static_argnames=("n", "block"))
+def zo_sumsq(n: int, salt, offset=0, block: int = 4096):
+    return zo_k.zo_sumsq(n, salt, offset, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def zo_perturb(x, salt, scale, offset=0, block: int = 4096):
+    return zo_k.zo_perturb(x, salt, scale, offset, block=block, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("n", "block"))
+def zo_reconstruct(n: int, salts, coeffs, offset=0, block: int = 4096):
+    return zo_k.zo_reconstruct(n, salts, coeffs, offset, block=block, interpret=INTERPRET)

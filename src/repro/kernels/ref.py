@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.directions import gaussian_from_salt
+
+
+def ref_rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def ref_attention(
+    q: jax.Array,            # (BH, Sq, hd)
+    k: jax.Array,            # (BH, Sk, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    Sq, hd = q.shape[1], q.shape[2]
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(hd))
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    rel = jnp.arange(Sq)[:, None] - jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ref_selective_scan(u, dt, Bmat, Cmat, A, D):
+    """Sequential lax.scan oracle of the mamba recurrence."""
+    uf = u.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def step(h, xs):
+        u_t, dt_t, B_t, C_t = xs                      # (B,di),(B,di),(B,n),(B,n)
+        dA = jnp.exp(dt_t[..., None] * A)             # (B,di,n)
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]
+        h = dA * h + dBu
+        y = jnp.sum(h * C_t[:, None, :], axis=-1) + D * u_t
+        return h, y
+
+    B, S, di = u.shape
+    n = A.shape[1]
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    xs = (uf.swapaxes(0, 1), dtf.swapaxes(0, 1),
+          Bmat.astype(jnp.float32).swapaxes(0, 1),
+          Cmat.astype(jnp.float32).swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype)
+
+
+def ref_zo_sumsq(n: int, salt, offset=0) -> jax.Array:
+    g = gaussian_from_salt((n,), jnp.asarray(salt, jnp.uint32), offset)
+    return jnp.sum(g * g)
+
+
+def ref_zo_perturb(x: jax.Array, salt, scale, offset=0) -> jax.Array:
+    g = gaussian_from_salt(x.shape, jnp.asarray(salt, jnp.uint32), offset)
+    return (x.astype(jnp.float32) + jnp.float32(scale) * g).astype(x.dtype)
+
+
+def ref_zo_reconstruct(n: int, salts, coeffs, offset=0) -> jax.Array:
+    acc = jnp.zeros((n,), jnp.float32)
+    for w in range(salts.shape[0]):
+        g = gaussian_from_salt((n,), jnp.asarray(salts[w], jnp.uint32), offset)
+        acc = acc + coeffs[w] * g
+    return acc

@@ -1,0 +1,88 @@
+"""Mamba-1 selective-scan Pallas kernel.
+
+TPU adaptation of the CUDA fused scan: the (d_inner, n) running state lives
+in VMEM scratch and persists across sequential sequence-block grid steps, so
+the (B, S, d_inner, n) intermediate the pure-jnp associative scan
+materializes (see models/ssm.py) never touches HBM.  HBM traffic drops from
+O(S*di*n) to O(S*(di + n)) — the memory-roofline win quantified in
+EXPERIMENTS.md §Perf.
+
+Layout: channels tiled (block_d), sequence tiled (block_s, sequential), time
+recurrence is an in-register ``fori_loop`` over the block's steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, h_scr,
+                 *, block_s: int):
+    sb = pl.program_id(2)
+
+    @pl.when(sb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[...].astype(jnp.float32)            # (bd, n)
+    Dp = d_ref[...].astype(jnp.float32)           # (bd,)
+    u = u_ref[0].astype(jnp.float32)              # (bs, bd)
+    dt = dt_ref[0].astype(jnp.float32)            # (bs, bd)
+    Bm = b_ref[0].astype(jnp.float32)             # (bs, n)
+    Cm = c_ref[0].astype(jnp.float32)             # (bs, n)
+
+    def step(t, carry):
+        h = carry                                  # (bd, n)
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]   # (bd,)
+        u_t = jax.lax.dynamic_slice_in_dim(u, t, 1, 0)[0]
+        B_t = jax.lax.dynamic_slice_in_dim(Bm, t, 1, 0)[0]    # (n,)
+        C_t = jax.lax.dynamic_slice_in_dim(Cm, t, 1, 0)[0]
+        dA = jnp.exp(dt_t[:, None] * A)                       # (bd, n)
+        dBu = (dt_t * u_t)[:, None] * B_t[None, :]
+        h = dA * h + dBu
+        y_t = jnp.sum(h * C_t[None, :], axis=1) + Dp * u_t    # (bd,)
+        o_ref[0, t, :] = y_t.astype(o_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, block_s, step, h_scr[...])
+
+
+def selective_scan_pallas(
+    u: jax.Array,      # (B, S, di) — post-conv, post-silu activations
+    dt: jax.Array,     # (B, S, di) — softplus'd timestep
+    Bmat: jax.Array,   # (B, S, n)
+    Cmat: jax.Array,   # (B, S, n)
+    A: jax.Array,      # (di, n) — negative decay matrix
+    D: jax.Array,      # (di,)
+    *,
+    block_d: int = 256,
+    block_s: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, S, di = u.shape
+    n = A.shape[1]
+    block_d = min(block_d, di)
+    block_s = min(block_s, S)
+    assert di % block_d == 0 and S % block_s == 0
+    kern = functools.partial(_scan_kernel, block_s=block_s)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B, S, di), u.dtype),
+        # sequence dim must be innermost-sequential: state carries across it
+        grid=(B, di // block_d, S // block_s),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, n), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, n), lambda b, d, s: (b, s, 0)),
+            pl.BlockSpec((block_d, n), lambda b, d, s: (d, 0)),
+            pl.BlockSpec((block_d,), lambda b, d, s: (d,)),
+        ],
+        out_specs=pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+        scratch_shapes=[pltpu.VMEM((block_d, n), jnp.float32)],
+        interpret=interpret,
+    )(u, dt, Bmat, Cmat, A, D)

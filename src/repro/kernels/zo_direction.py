@@ -1,0 +1,141 @@
+"""The paper-specific Pallas kernels: fused ZO direction generate+apply.
+
+A ZO iteration is purely memory-bound (stream the d parameters twice: once
+to perturb, once to update).  The naive jnp path writes the random direction
+``v`` to HBM between generation and use; these kernels regenerate ``v``
+on the fly inside the tile (the hash of repro.core.directions, bit-identical)
+so the direction never exists in HBM:
+
+* ``zo_sumsq``       — sum of squares of a hashed Gaussian block (for the
+                       unit-sphere normalization), zero HBM reads.
+* ``zo_perturb``     — ``x + (mu * inv_norm) * v``: one read + one write of x.
+* ``zo_reconstruct`` — ``acc += sum_i coeff_i * v_i`` for all m workers in a
+                       single pass over the parameters (m gaussians per
+                       element generated in registers).
+
+``offset`` is each leaf's base index in the flat d-dim parameter vector, so
+block-local counters agree with the whole-tree hash used by the optimizer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.directions import _GOLDEN, _SALT2, _TWO_PI, _XOR2, _uniform01, mix32
+
+
+def _gauss_block(start: jax.Array, n: int, salt: jax.Array) -> jax.Array:
+    """n standard normals for flat counters [start, start+n) (Box–Muller)."""
+    idx = jax.lax.iota(jnp.uint32, n) + start
+    h1 = mix32(idx * _GOLDEN + salt)
+    h2 = mix32(idx * _SALT2 + (salt ^ _XOR2))
+    u1 = _uniform01(h1)
+    u2 = _uniform01(h2)
+    return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(_TWO_PI * u2)
+
+
+# --------------------------------------------------------------------------- #
+def _sumsq_kernel(meta_ref, o_ref, *, block: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    salt = meta_ref[0].astype(jnp.uint32)
+    offset = meta_ref[1].astype(jnp.uint32)
+    g = _gauss_block(offset + jnp.uint32(i * block), block, salt)
+    o_ref[0] += jnp.sum(g * g)
+
+
+def zo_sumsq(n: int, salt, offset=0, block: int = 4096, interpret: bool = True) -> jax.Array:
+    """||v_leaf||^2 for a hashed Gaussian leaf of n elements (no HBM input)."""
+    assert n % block == 0 or n < block
+    block = min(block, n)
+    meta = jnp.asarray([salt, offset], jnp.uint32)
+    out = pl.pallas_call(
+        functools.partial(_sumsq_kernel, block=block),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((1,), lambda i: (0,)),
+        interpret=interpret,
+    )(meta)
+    return out[0]
+
+
+# --------------------------------------------------------------------------- #
+def _perturb_kernel(x_ref, meta_ref, scale_ref, o_ref, *, block: int):
+    i = pl.program_id(0)
+    salt = meta_ref[0].astype(jnp.uint32)
+    offset = meta_ref[1].astype(jnp.uint32)
+    g = _gauss_block(offset + jnp.uint32(i * block), block, salt)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = (x + scale_ref[0] * g).astype(o_ref.dtype)
+
+
+def zo_perturb(
+    x: jax.Array,        # flat (n,) parameter leaf
+    salt,
+    scale,               # mu * inv_norm (fp32 scalar)
+    offset=0,
+    block: int = 4096,
+    interpret: bool = True,
+) -> jax.Array:
+    n = x.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    meta = jnp.asarray([salt, offset], jnp.uint32)
+    return pl.pallas_call(
+        functools.partial(_perturb_kernel, block=block),
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(x, meta, jnp.asarray([scale], jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+def _reconstruct_kernel(salts_ref, coeffs_ref, off_ref, o_ref, *, block: int, m: int):
+    i = pl.program_id(0)
+    start = off_ref[0].astype(jnp.uint32) + jnp.uint32(i * block)
+    acc = jnp.zeros((block,), jnp.float32)
+    for w in range(m):  # static worker unroll: m gaussians live in registers
+        g = _gauss_block(start, block, salts_ref[w].astype(jnp.uint32))
+        acc = acc + coeffs_ref[w] * g
+    o_ref[...] = acc
+
+
+def zo_reconstruct(
+    n: int,
+    salts: jax.Array,    # (m,) uint32 — per-worker leaf salts
+    coeffs: jax.Array,   # (m,) fp32   — c_i * inv_norm_i / m, pre-scaled
+    offset=0,
+    block: int = 4096,
+    interpret: bool = True,
+) -> jax.Array:
+    """sum_i coeffs_i * v_i for one flat leaf, one pass, no HBM directions."""
+    m = salts.shape[0]
+    block = min(block, n)
+    assert n % block == 0
+    return pl.pallas_call(
+        functools.partial(_reconstruct_kernel, block=block, m=m),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(salts, coeffs, jnp.asarray([offset], jnp.uint32))

@@ -1,0 +1,108 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape).
+
+``input_specs`` builds the exact abstract inputs each dry-run target takes —
+weak-type-correct, shardable, zero allocation.  Decode shapes include the
+full-length KV caches / SSM states; long_500k shards the cache *sequence*
+over the worker axes (batch=1).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import batch_specs, cache_specs, param_specs, worker_axes
+from repro.models import transformer as T
+
+Struct = jax.ShapeDtypeStruct
+
+
+def _ns(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def abstract_params(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(lambda k: T.init_model(k, cfg), jax.random.key(0))
+
+
+def train_batch_structs(cfg: ModelConfig, shape: ShapeConfig,
+                        with_labels: bool = True) -> Dict[str, Struct]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    if cfg.frontend == "audio":
+        b = {"features": Struct((B, S, cfg.d_model), act)}
+        if with_labels:
+            b["labels"] = Struct((B, S), jnp.int32)
+        return b
+    if cfg.frontend == "vision":
+        Pn = cfg.n_patches
+        assert S > Pn, (S, Pn)
+        b = {
+            "tokens": Struct((B, S - Pn), jnp.int32),
+            "image_embeds": Struct((B, Pn, cfg.d_model), act),
+        }
+        if with_labels:
+            b["labels"] = Struct((B, S), jnp.int32)   # -1 over the patch prefix
+        return b
+    b = {"tokens": Struct((B, S), jnp.int32)}
+    if with_labels:
+        b["labels"] = Struct((B, S), jnp.int32)
+    return b
+
+
+def decode_structs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Struct, Struct, Dict]:
+    B, S = shape.global_batch, shape.seq_len
+    act = jnp.dtype(cfg.dtype)
+    caches = jax.eval_shape(lambda: T.init_caches(cfg, B, S, act))
+    token = Struct((B,), jnp.int32)
+    pos = Struct((), jnp.int32)
+    return token, pos, caches
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                kind: str) -> Tuple[Tuple, Tuple]:
+    """Returns (arg_structs, arg_shardings) for the given step kind.
+
+    kind: 'train' -> (t, params, opt_state, batch)
+          'prefill' -> (params, batch)
+          'decode' -> (params, token, pos, caches)
+    """
+    pstruct = abstract_params(cfg)
+    psharding = _ns(mesh, param_specs(cfg, pstruct, mesh))
+    repl = NamedSharding(mesh, P())
+
+    if kind == "train":
+        batch = train_batch_structs(cfg, shape)
+        args = (Struct((), jnp.int32), pstruct, (), batch)
+        shardings = (repl, psharding, (), _ns(mesh, batch_specs(mesh, batch)))
+        return args, shardings
+    if kind == "prefill":
+        batch = train_batch_structs(cfg, shape, with_labels=cfg.encoder_only)
+        args = (pstruct, batch)
+        shardings = (psharding, _ns(mesh, batch_specs(mesh, batch)))
+        return args, shardings
+    if kind == "decode":
+        token, pos, caches = decode_structs(cfg, shape)
+        seq_sharded = shape.name == "long_500k"
+        csh = _ns(mesh, cache_specs(cfg, mesh, caches, seq_sharded))
+        tok_sh = (
+            repl if shape.global_batch % _workers(mesh) else
+            NamedSharding(mesh, P(worker_axes(mesh)))
+        )
+        args = (pstruct, token, pos, caches)
+        shardings = (psharding, tok_sh, repl, csh)
+        return args, shardings
+    raise ValueError(kind)
+
+
+def _workers(mesh: Mesh) -> int:
+    n = 1
+    for a in worker_axes(mesh):
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,118 @@
+"""End-to-end distributed training driver (HO-SGD or any baseline).
+
+Runs the real thing on whatever devices exist (CPU devices here; the same
+code drives a TPU slice).  Example — train a ~100M model for 200 steps:
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-14b --reduce 100m \
+        --steps 200 --tau 8 --batch 16 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import save as ckpt_save
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ModelConfig
+from repro.core.distributed import make_distributed_ho_sgd
+from repro.core.ho_sgd import HOSGDConfig
+from repro.data import shard_batches, token_batches
+from repro.dist.sharding import batch_specs, param_specs, n_workers
+from repro.launch.mesh import make_test_mesh
+from repro.metrics import CSVLogger
+from repro.models import transformer as T
+from repro.opt.optimizers import sgd, const_schedule
+
+
+def size_override(cfg: ModelConfig, preset: str) -> ModelConfig:
+    """Depth/width presets so examples fit the local device."""
+    if preset == "full":
+        return cfg
+    if preset == "100m":
+        return cfg.with_(
+            n_layers=max(cfg.pattern_period * 4, 8), d_model=768,
+            n_heads=12, n_kv_heads=max(1, min(cfg.n_kv_heads, 4)),
+            head_dim=64, d_ff=2048, dense_d_ff=min(cfg.dense_d_ff, 2048),
+            vocab_size=min(cfg.vocab_size, 32768),
+            n_experts=min(cfg.n_experts, 8), dt_rank=48,
+            dtype="float32",
+        )
+    if preset == "smoke":
+        return cfg.reduced()
+    raise ValueError(preset)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-14b", choices=ARCH_IDS)
+    ap.add_argument("--reduce", default="smoke", choices=["full", "100m", "smoke"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--mu", type=float, default=1e-3)
+    ap.add_argument("--lr", type=float, default=3e-2)
+    ap.add_argument("--zo-lr", type=float, default=None)
+    ap.add_argument("--batch", type=int, default=8, help="global batch")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--data-axis", type=int, default=0, help="0 = all devices")
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log", default=None)
+    args = ap.parse_args(argv)
+
+    n_dev = jax.device_count()
+    data_ax = args.data_axis or max(1, n_dev // args.model_axis)
+    mesh = make_test_mesh(data=data_ax, model=args.model_axis)
+    m = n_workers(mesh)
+
+    cfg = size_override(get_config(args.arch), args.reduce)
+    if cfg.frontend != "none":
+        raise SystemExit("use examples/ drivers for frontend archs")
+    print(f"arch={cfg.name} params={cfg.param_count():,} mesh={dict(mesh.shape)} "
+          f"workers={m}")
+
+    params = T.init_model(jax.random.key(args.seed), cfg)
+    loss_fn = lambda p, b: T.loss_fn(cfg, p, b)
+    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    zo_lr = args.zo_lr if args.zo_lr is not None else args.lr * 50.0 / d
+    ho = HOSGDConfig(tau=args.tau, mu=args.mu, m=m, lr=args.lr, zo_lr=zo_lr,
+                     seed=args.seed)
+    opt = sgd(const_schedule(args.lr))
+    fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,
+                                     params_like=params)
+
+    with jax.set_mesh(mesh):
+        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                       is_leaf=lambda x: isinstance(x, P))
+        params = jax.device_put(params, ns(param_specs(cfg, params, mesh)))
+        opt_state = opt.init(params)
+        fo_j, zo_j = jax.jit(fo), jax.jit(zo)
+
+        host = token_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+        logger = CSVLogger(args.log, ["step", "order", "loss", "dt"])
+        t_prev = time.perf_counter()
+        for t, batch in zip(range(args.steps), shard_batches(host, mesh)):
+            step = fo_j if t % args.tau == 0 else zo_j
+            params, opt_state, loss = step(jnp.int32(t), params, opt_state, batch)
+            if t % 10 == 0 or t == args.steps - 1:
+                now = time.perf_counter()
+                print(f"step {t:5d} ({'FO' if t % args.tau == 0 else 'ZO'}) "
+                      f"loss={float(loss):.4f} dt={now - t_prev:.2f}s")
+                t_prev = now
+            logger.log(step=t, order=int(t % args.tau == 0), loss=float(loss),
+                       dt=time.perf_counter() - t_prev)
+        if args.ckpt:
+            path = ckpt_save(args.ckpt, args.steps, jax.device_get(params))
+            print("checkpoint:", path)
+        logger.close()
+    print("done; final loss", float(loss))
+    return float(loss)
+
+
+if __name__ == "__main__":
+    main()

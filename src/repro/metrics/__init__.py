@@ -1,0 +1,1 @@
+from repro.metrics.logging import CSVLogger, MeterRegistry  # noqa: F401

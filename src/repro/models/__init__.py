@@ -1,0 +1,8 @@
+from repro.models.transformer import (  # noqa: F401
+    decode_step,
+    forward_logits,
+    init_caches,
+    init_model,
+    loss_fn,
+    prefill,
+)

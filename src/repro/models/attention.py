@@ -1,0 +1,221 @@
+"""GQA attention: RoPE, qk-norm, logit soft-capping, sliding window, KV cache."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rmsnorm, softcap
+
+Params = Dict[str, jax.Array]
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> Params:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kv * hd), dtype),
+        "wv": dense_init(ks[2], (d, kv * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, h, hd)
+    k = (x @ p["wk"]).reshape(B, S, kv, hd)
+    v = (x @ p["wv"]).reshape(B, S, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.encoder_only:
+        return q, k, v  # hubert/w2v2 use absolute (stub) features, no rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _attend(
+    cfg: ModelConfig,
+    q: jax.Array,                 # (B, Sq, H, hd)
+    k: jax.Array,                 # (B, Sk, KV, hd)
+    v: jax.Array,                 # (B, Sk, KV, hd)
+    q_positions: jax.Array,       # (B, Sq) or (Sq,)
+    k_positions: jax.Array,       # (B, Sk) or (Sk,)
+    window: Optional[jax.Array],  # scalar int32 or None (None = full attention)
+    causal: bool,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qg = q.reshape(B, Sq, KV, rep, hd)
+    logits = jnp.einsum(
+        "bqgrd,bkgd->bgrqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if cfg.attn_softcap:
+        logits = softcap(logits, cfg.attn_softcap)
+    qp = jnp.broadcast_to(jnp.atleast_2d(q_positions), (B, Sq))
+    kp = jnp.broadcast_to(jnp.atleast_2d(k_positions), (B, k.shape[1]))
+    rel = qp[:, :, None] - kp[:, None, :]               # (B, Sq, Sk)
+    mask = jnp.ones_like(rel, dtype=bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    logits = jnp.where(mask[:, None, None, :, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H * hd).astype(q.dtype)
+
+
+def _attend_seq(cfg: ModelConfig, q, k, v, positions, window) -> jax.Array:
+    """Full-sequence attention, q-chunked when configured.
+
+    Dense masked attention holds (B, H, Sq, Sk) fp32 scores; streaming query
+    blocks of ``cfg.attn_chunk`` bounds that to (B, H, chunk, Sk) — the
+    XLA-level analogue of the Pallas flash kernel's VMEM tiling (which is the
+    real-TPU path; see kernels/flash_attention.py).
+    """
+    B, S = q.shape[0], q.shape[1]
+    causal = not cfg.encoder_only
+    if cfg.use_pallas:
+        # kernel path: needs one static window across layers (or all-full)
+        ws = set(cfg.layer_windows())
+        if len(ws) == 1:
+            out = _flash_kernel_call(cfg, q, k, v, causal, next(iter(ws)))
+            if out is not None:
+                return out
+    chunk = cfg.attn_chunk
+    if chunk:
+        while S % chunk:
+            chunk //= 2
+    if not chunk or S <= chunk:
+        return _attend(cfg, q, k, v, positions, positions, window, causal)
+    nc = S // chunk
+
+    def body(_, xs):
+        q_i, pos_i = xs                      # (B, chunk, H, hd), (chunk,)
+        o = _attend(cfg, q_i, k, v, pos_i, positions, window, causal)
+        return None, o
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    q_c = q.reshape(B, nc, chunk, *q.shape[2:]).swapaxes(0, 1)
+    pos_c = positions.reshape(nc, chunk)
+    _, outs = jax.lax.scan(
+        body, None, (q_c, pos_c), unroll=nc if cfg.scan_unroll else 1)
+    return outs.swapaxes(0, 1).reshape(B, S, -1)
+
+
+def _flash_kernel_call(cfg: ModelConfig, q, k, v, causal, w_static):
+    """Dispatch to the Pallas flash-attention kernel when shapes allow."""
+    S = q.shape[1]
+    if S % 128 and S % 64:
+        return None  # fall back to the jnp path for unaligned smoke shapes
+    from repro.kernels import ops
+    block = 128 if S % 128 == 0 else 64
+    out = ops.flash_attention(
+        q, k, v, causal=causal, window=w_static, softcap=cfg.attn_softcap,
+        block_q=block, block_k=block)
+    B = q.shape[0]
+    return out.reshape(B, S, -1)
+
+
+def attention_forward(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,               # (B, S, D)
+    window: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence attention (train / prefill), causal unless encoder_only."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attend_seq(cfg, q, k, v, positions, window)
+    return out @ p["wo"]
+
+
+def attention_prefill(
+    cfg: ModelConfig, p: Params, x: jax.Array, window: Optional[jax.Array] = None
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Like forward but also returns the (k, v) cache."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    out = _attend_seq(cfg, q, k, v, positions, window)
+    return out @ p["wo"], (k, v)
+
+
+def _hd_model_spec(ndim: int):
+    """P(..., 'model') on the trailing head_dim, when a mesh is ambient.
+
+    Decode attention with an hd-sharded cache needs q/k/v contraction dims
+    aligned, or the partitioner all-gathers the WHOLE cache over the model
+    axis per layer (measured: 1 GiB fp32/layer for gemma2 decode_32k —
+    EXPERIMENTS.md §Perf iteration 3)."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if am is None or not am.axis_names or "model" not in am.axis_names:
+        return None
+    return P(*([None] * (ndim - 1) + ["model"]))
+
+
+def _constrain_hd(x: jax.Array) -> jax.Array:
+    spec = _hd_model_spec(x.ndim)
+    if spec is None:
+        return x
+    ms = jax.sharding.get_abstract_mesh().shape["model"]
+    if x.shape[-1] % ms:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                       # (B, 1, D) current token's hidden
+    cache: Tuple[jax.Array, jax.Array],  # k,v (B, S, KV, hd); positions 0..S-1
+    pos: jax.Array,                      # scalar int32: index of current token
+    window: Optional[jax.Array] = None,
+    static_window: Optional[int] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """One-token decode against a KV cache; writes the new k/v at ``pos``.
+
+    When every layer shares one static window, ``static_window`` lets us read
+    only the last ``W`` cache slots (a dynamic_slice) instead of streaming the
+    whole cache — this is what makes windowed decode sub-linear in cache size.
+    """
+    k_cache, v_cache = cache
+    S = k_cache.shape[1]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    q = _constrain_hd(q)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+    if static_window is not None and static_window < S:
+        W = static_window
+        start = jnp.clip(pos - W + 1, 0, S - W)
+        k_read = jax.lax.dynamic_slice_in_dim(k_cache, start, W, axis=1)
+        v_read = jax.lax.dynamic_slice_in_dim(v_cache, start, W, axis=1)
+        k_positions = start + jnp.arange(W, dtype=jnp.int32)
+    else:
+        k_read, v_read = k_cache, v_cache
+        k_positions = jnp.arange(S, dtype=jnp.int32)
+    k_read = _constrain_hd(k_read)
+    v_read = _constrain_hd(v_read)
+    # beyond-pos slots are masked by the causal rel>=0 test (q position == pos)
+    out = _attend(
+        cfg, q, k_read, v_read, positions, k_positions, window, causal=True
+    )
+    return out @ p["wo"], (k_cache, v_cache)

@@ -1,0 +1,109 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings, initializers."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, jax.Array]
+
+
+# --------------------------------------------------------------------------- #
+# initialisation
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    """Variance-scaling (fan-in) truncated-normal init."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    # (1 + scale) parameterisation (gemma/qwen style): init scale = 0 ≡ identity
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> Params:
+    p = {"scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------------- #
+def init_mlp(key, cfg: ModelConfig, d_ff: int, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(ks[0], (d, d_ff), dtype),
+            "wu": dense_init(ks[1], (d, d_ff), dtype),
+            "wd": dense_init(ks[2], (d_ff, d), dtype),
+        }
+    return {
+        "wu": dense_init(ks[0], (d, d_ff), dtype),
+        "wd": dense_init(ks[1], (d_ff, d), dtype),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"], approximate=True)
+    return h @ p["wd"]
+
+
+# --------------------------------------------------------------------------- #
+# rotary position embeddings
+# --------------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,129 @@
+"""Token-choice top-k MoE with capacity-based gather dispatch.
+
+TPU adaptation: GPU MoE stacks (megablocks) use ragged sparse kernels; the
+TPU-idiomatic formulation (GShard/Switch lineage) routes through dense
+gathers with a per-expert capacity so every matmul is MXU-shaped
+``(E, C, d) x (E, d, f)``.  FLOPs scale with *active* tokens times the
+capacity factor, so compiled cost analysis reflects the paper-style
+6*N_active*D accounting.  Expert weights shard either on the FFN hidden dim
+(``moe_sharding='tensor'``) or on the expert dim (``'expert'``) — the
+collective pattern (all-reduce vs all-to-all-like regather) differs and is a
+hillclimb lever (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts))
+    return max(8, ((cap + 7) // 8) * 8)  # pad to lane-friendly multiple
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Params:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32),
+        "wg": dense_init(ks[1], (e, d, f), dtype),
+        "wu": dense_init(ks[2], (e, d, f), dtype),
+        "wd": dense_init(ks[3], (e, f, d), dtype),
+    }
+    return p
+
+
+def _expert_spec(cfg: ModelConfig, e_dim: int, hidden_dim=None):
+    """PartitionSpec for (E, C, ...) dispatch tensors, matching the expert
+    weights' sharding (expert dim over data under fsdp; hidden over model).
+    Returns None when no mesh (or the axes) are available — smoke tests."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None
+    if am is None or not am.axis_names or "model" not in am.axis_names:
+        return None
+    parts = [None, None, None]
+    if cfg.fsdp and "data" in am.axis_names and cfg.n_experts % am.shape["data"] == 0:
+        parts[e_dim] = "data"
+    if hidden_dim is not None:
+        parts[hidden_dim] = "model"
+    return P(*parts)
+
+
+def _constrain(x, spec):
+    return x if spec is None else jax.lax.with_sharding_constraint(x, spec)
+
+
+def moe_forward(
+    cfg: ModelConfig, p: Params, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """x (B,S,D) -> (y (B,S,D), load-balance aux loss scalar).
+
+    The (E, C, ...) dispatch tensors carry explicit sharding constraints
+    matching the expert weights — without them the SPMD partitioner is free
+    to replicate the expert matmuls per device (measured: ~100-380x FLOPs
+    inflation on the MoE giants; EXPERIMENTS.md §Perf iteration 1).
+    """
+    B, S, D = x.shape
+    T, k, E = B * S, cfg.top_k, cfg.n_experts
+    C = moe_capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32)) @ p["router"]            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, k)                 # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=0)                               # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=1), axis=0
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # position of each (token, slot) within its expert's capacity buffer,
+    # via sort-based ranking.  NOT jnp.cumsum over the (T*k, E) one-hot: XLA
+    # lowers cumsum to a ReduceWindow whose FLOP count is quadratic in T*k
+    # (measured 1.1e17 flops/device for qwen3-moe's ZO step), and the
+    # log-depth associative_scan alternative explodes compile time in the
+    # unrolled cost-analysis lowerings (§Perf iteration 1).
+    flat_e = expert_ids.reshape(T * k)                         # routing order: t-major
+    order = jnp.argsort(flat_e, stable=True)                   # groups by expert,
+    e_sorted = flat_e[order]                                   # token-order within
+    starts = jnp.searchsorted(e_sorted, jnp.arange(E, dtype=flat_e.dtype))
+    pos_sorted = (jnp.arange(T * k, dtype=jnp.int32)
+                  - starts.astype(jnp.int32)[e_sorted])
+    flat_pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+    keep = flat_pos < C
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+
+    # dispatch: (E, C) slot -> token index (gather beats scatter-add on TPU)
+    tok_for_slot = jnp.zeros((E, C), jnp.int32).at[flat_e, flat_pos].set(
+        flat_tok, mode="drop"
+    )
+    slot_valid = jnp.zeros((E, C), bool).at[flat_e, flat_pos].set(keep, mode="drop")
+    expert_in = jnp.take(xf, tok_for_slot, axis=0) * slot_valid[..., None].astype(x.dtype)
+    expert_in = _constrain(expert_in, _expert_spec(cfg, e_dim=0))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, p["wu"]
+    )
+    h = _constrain(h, _expert_spec(cfg, e_dim=0, hidden_dim=2))
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["wd"])             # (E, C, D)
+    out_e = _constrain(out_e, _expert_spec(cfg, e_dim=0))
+
+    # combine: gather each (token, slot)'s expert output back
+    gathered = out_e[flat_e, flat_pos]                         # (T*k, D)
+    w = (gate.reshape(T * k) * keep.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.sum((gathered * w[:, None]).reshape(T, k, D), axis=1)
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,147 @@
+"""Mamba-1 selective SSM block (falcon-mamba / hymba mamba heads).
+
+TPU adaptation (see DESIGN.md §4): the CUDA reference fuses the recurrence in
+a warp-level kernel; in pure JAX we use ``jax.lax.associative_scan`` (log-depth,
+VPU-friendly) which materialises the (B,S,d_inner,n) state in HBM.  The Pallas
+``selective_scan`` kernel (kernels/selective_scan.py) removes that traffic by
+keeping the running state in VMEM; ``cfg.ssm_chunk`` bounds peak memory for
+the jnp path by scanning over sequence chunks.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+Params = Dict[str, jax.Array]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dtr, K = cfg.dt_rank_actual, cfg.ssm_conv
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (K, di), dtype, scale=1.0),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), dtype),
+        "dt_w": dense_init(ks[3], (dtr, di), dtype),
+        # softplus(dt_b) ~= 0.01 at init (standard mamba dt bias init)
+        "dt_b": jnp.full((di,), -4.6, jnp.float32),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype),
+    }
+
+
+def _causal_conv(p: Params, u: jax.Array, K: int) -> jax.Array:
+    """Depthwise causal conv, kernel K: u (B,S,di) -> (B,S,di)."""
+    B, S, di = u.shape
+    padded = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    y = jnp.zeros_like(u, dtype=jnp.float32)
+    for k in range(K):  # K is 4: unrolled shifts beat a conv op for clarity
+        y = y + p["conv_w"][k].astype(jnp.float32) * padded[:, k : k + S].astype(jnp.float32)
+    return (y + p["conv_b"]).astype(u.dtype)
+
+
+def _ssm_inputs(cfg: ModelConfig, p: Params, u: jax.Array):
+    """u (B,S,di) -> (deltaA, deltaBu, C) with shapes (B,S,di,n)/(B,S,n)."""
+    dtr, n = cfg.dt_rank_actual, cfg.ssm_state
+    x_dbl = (u @ p["x_proj"]).astype(jnp.float32)
+    dt_low, Bmat, Cmat = jnp.split(x_dbl, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_w"].astype(jnp.float32) + p["dt_b"])
+    A = -jnp.exp(p["A_log"])                                  # (di, n)
+    deltaA = jnp.exp(dt[..., None] * A)                       # (B,S,di,n)
+    deltaBu = (dt * u.astype(jnp.float32))[..., None] * Bmat[..., None, :]
+    return deltaA, deltaBu, Cmat
+
+
+def _assoc_scan(deltaA: jax.Array, deltaBu: jax.Array, h0=None):
+    """h[t] = deltaA[t]*h[t-1] + deltaBu[t] along axis=1 (seq)."""
+    if h0 is not None:
+        deltaBu = deltaBu.at[:, 0].add(deltaA[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (deltaA, deltaBu), axis=1)
+    return h
+
+
+def mamba_mix(cfg: ModelConfig, p: Params, u: jax.Array) -> jax.Array:
+    """Sequence mixing only (conv + selective scan), u (B,S,di) -> (B,S,di)."""
+    u = jax.nn.silu(_causal_conv(p, u, cfg.ssm_conv))
+    if cfg.use_pallas and u.shape[1] % 64 == 0 and cfg.d_inner % 64 == 0:
+        # Pallas fused-scan path (TPU; interpret-validated): recompute the
+        # kernel inputs without materializing (B,S,di,n)
+        from repro.kernels import ops
+        dtr, n = cfg.dt_rank_actual, cfg.ssm_state
+        x_dbl = (u @ p["x_proj"]).astype(jnp.float32)
+        dt_low, Bm, Cm = jnp.split(x_dbl, [dtr, dtr + n], axis=-1)
+        dt = jax.nn.softplus(dt_low @ p["dt_w"].astype(jnp.float32) + p["dt_b"])
+        A = -jnp.exp(p["A_log"])
+        return ops.selective_scan(
+            u.astype(jnp.float32), dt, Bm, Cm, A, p["D"],
+            block_d=min(256, cfg.d_inner), block_s=min(128, u.shape[1]),
+        ).astype(u.dtype)
+    deltaA, deltaBu, Cmat = _ssm_inputs(cfg, p, u)
+    if cfg.ssm_chunk and u.shape[1] > cfg.ssm_chunk:
+        S, ck = u.shape[1], cfg.ssm_chunk
+        assert S % ck == 0
+        B, di, n = u.shape[0], cfg.d_inner, cfg.ssm_state
+
+        def step(h, xs):
+            dA, dBu = xs  # (B, ck, di, n) each
+            h_seq = _assoc_scan(dA, dBu, h0=h)
+            return h_seq[:, -1], h_seq
+
+        rs = lambda t: t.reshape(B, S // ck, ck, di, n).swapaxes(0, 1)
+        _, h = jax.lax.scan(step, jnp.zeros((B, di, n), jnp.float32), (rs(deltaA), rs(deltaBu)))
+        h = h.swapaxes(0, 1).reshape(B, S, di, n)
+    else:
+        h = _assoc_scan(deltaA, deltaBu)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cmat) + p["D"] * u.astype(jnp.float32)
+    return y.astype(u.dtype)
+
+
+def mamba_forward(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Full mamba block: x (B,S,D) -> (B,S,D)."""
+    u, z = jnp.split(x @ p["in_proj"], 2, axis=-1)
+    y = mamba_mix(cfg, p, u)
+    return (y * jax.nn.silu(z)) @ p["out_proj"]
+
+
+# --------------------------------------------------------------------------- #
+# decode (single-token recurrence)
+# --------------------------------------------------------------------------- #
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Tuple[jax.Array, jax.Array]:
+    """(conv_state (B, K-1, di), ssm_state (B, di, n))."""
+    return (
+        jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )
+
+
+def mamba_decode(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                                   # (B, 1, D)
+    state: Tuple[jax.Array, jax.Array],
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    conv_state, h = state
+    K = cfg.ssm_conv
+    u, z = jnp.split(x[:, 0] @ p["in_proj"], 2, axis=-1)      # (B, di)
+    window = jnp.concatenate([conv_state, u[:, None]], axis=1)  # (B, K, di)
+    conv_y = jnp.einsum("bkd,kd->bd", window.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    u_c = jax.nn.silu(conv_y + p["conv_b"]).astype(u.dtype)
+    deltaA, deltaBu, Cmat = _ssm_inputs(cfg, p, u_c[:, None])  # seq dim 1
+    h = deltaA[:, 0] * h + deltaBu[:, 0]                       # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, Cmat[:, 0]) + p["D"] * u_c.astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["out_proj"]
+    return out[:, None], (window[:, 1:], h)

@@ -1,0 +1,9 @@
+from repro.opt.optimizers import (  # noqa: F401
+    Optimizer,
+    adam,
+    const_schedule,
+    cosine_schedule,
+    invsqrt_schedule,
+    sgd,
+    theorem_lr,
+)

@@ -1,0 +1,102 @@
+"""Optimizers and LR schedules, built from scratch (no optax in this env).
+
+An ``Optimizer`` is an (init, update) pair over pytrees; ``update`` consumes
+the *gradient estimate* (first- or zeroth-order — the paper's point is that
+the update rule doesn't care) and returns parameter deltas.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params, t) -> (deltas, state)
+
+
+def _tree_zeros_like(tree):
+    return jax.tree.map(lambda t: jnp.zeros_like(t, dtype=jnp.float32), tree)
+
+
+# --------------------------------------------------------------------------- #
+# schedules
+# --------------------------------------------------------------------------- #
+def const_schedule(lr: float):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def invsqrt_schedule(lr: float, warmup: int = 0):
+    def f(t):
+        s = jnp.sqrt(jnp.asarray(warmup + 1, jnp.float32) / (t + warmup + 1))
+        return jnp.asarray(lr, jnp.float32) * s
+    return f
+
+
+def cosine_schedule(lr: float, total: int, warmup: int = 0, floor: float = 0.1):
+    def f(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = jnp.minimum(t / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((t - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.asarray(lr, jnp.float32) * jnp.where(t < warmup, warm, cos)
+    return f
+
+
+def theorem_lr(B: int, m: int, N: int, L: float = 1.0) -> float:
+    """Theorem 1 step size: alpha_t = sqrt(B*m) / (L*sqrt(N))."""
+    return math.sqrt(B * m) / (L * math.sqrt(N))
+
+
+# --------------------------------------------------------------------------- #
+# SGD (+ momentum)
+# --------------------------------------------------------------------------- #
+def sgd(schedule, momentum: float = 0.0):
+    def init(params):
+        return _tree_zeros_like(params) if momentum else ()
+
+    def update(grads, state, params, t):
+        lr = schedule(t)
+        if momentum:
+            state = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32), state, grads
+            )
+            deltas = jax.tree.map(lambda v: -lr * v, state)
+        else:
+            deltas = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
+        return deltas, state
+
+    return Optimizer(init, update)
+
+
+# --------------------------------------------------------------------------- #
+# Adam
+# --------------------------------------------------------------------------- #
+def adam(schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
+    def init(params):
+        return (_tree_zeros_like(params), _tree_zeros_like(params))
+
+    def update(grads, state, params, t):
+        mu, nu = state
+        tf = jnp.asarray(t + 1, jnp.float32)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), nu, grads
+        )
+        bc1 = 1 - b1 ** tf
+        bc2 = 1 - b2 ** tf
+        lr = schedule(t)
+        deltas = jax.tree.map(
+            lambda m, v: -lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu
+        )
+        return deltas, (mu, nu)
+
+    return Optimizer(init, update)
+
+
+def apply_deltas(params, deltas):
+    return jax.tree.map(lambda p, d: (p.astype(jnp.float32) + d).astype(p.dtype), params, deltas)

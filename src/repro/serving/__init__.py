@@ -1,0 +1,1 @@
+from repro.serving.engine import Engine, ServeConfig, serve_step  # noqa: F401

@@ -1,0 +1,15 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device.
+# Device-count-dependent tests run the dry-run / distributed checks in
+# subprocesses (see test_distributed.py) so this process stays single-device.
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

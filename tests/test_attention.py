@@ -1,0 +1,96 @@
+"""Attention semantics: windows, decode cache slicing, encoder mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as A
+from repro.models import transformer as T
+
+KEY = jax.random.key(0)
+
+
+def _cfg(**kw):
+    return get_config("qwen3-14b").reduced().with_(remat=False, **kw)
+
+
+def test_window_limits_context():
+    """With window W, logits at position i ignore keys before i-W+1."""
+    cfg = _cfg(attn_chunk=0)
+    p = A.init_attention(KEY, cfg, jnp.float32)
+    S, W = 24, 4
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (1, S, cfg.d_model)) * 0.2
+    out_w = A.attention_forward(cfg, p, x, jnp.int32(W))
+    # perturb a token far outside every later window
+    x2 = x.at[:, 2].set(5.0)
+    out_w2 = A.attention_forward(cfg, p, x2, jnp.int32(W))
+    # positions >= 2+W see no difference; positions < 2+W do
+    np.testing.assert_allclose(np.asarray(out_w[:, 2 + W:]),
+                               np.asarray(out_w2[:, 2 + W:]), atol=1e-5)
+    assert bool(jnp.any(jnp.abs(out_w[:, 2] - out_w2[:, 2]) > 1e-3))
+
+
+def test_decode_static_window_slice_matches_masked_full():
+    """The long-context decode fast path (dynamic_slice of the last W cache
+    slots) must equal masked full-cache attention."""
+    cfg = _cfg()
+    p = A.init_attention(KEY, cfg, jnp.float32)
+    B, S, W = 2, 32, 8
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, cfg.n_kv_heads, 32))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, cfg.n_kv_heads, 32))
+    x = jax.random.normal(jax.random.fold_in(KEY, 4), (B, 1, cfg.d_model)) * 0.2
+    for pos in (3, 7, 20, 31):
+        full, _ = A.attention_decode(cfg, p, x, (k, v), jnp.int32(pos),
+                                     window=jnp.int32(W))
+        sliced, _ = A.attention_decode(cfg, p, x, (k, v), jnp.int32(pos),
+                                       window=jnp.int32(W), static_window=W)
+        np.testing.assert_allclose(np.asarray(full), np.asarray(sliced),
+                                   rtol=1e-4, atol=1e-5, err_msg=f"pos={pos}")
+
+
+def test_long_context_variant_decode_consistency():
+    """gemma2's long_500k SWA variant: step-by-step decode == forward."""
+    cfg = get_config("gemma2-2b").reduced().with_(
+        remat=False, long_context=True)
+    assert cfg.subquadratic
+    params = T.init_model(jax.random.key(5), cfg)
+    B, S = 1, 20
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    full_logits, _ = T.forward_logits(cfg, params, {"tokens": toks})
+    caches = T.init_caches(cfg, B, S, jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, caches = T.decode_step(cfg, params, toks[:, t], jnp.int32(t), caches)
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full_logits), rtol=3e-3, atol=3e-3)
+
+
+def test_encoder_attention_is_bidirectional():
+    cfg = get_config("hubert-xlarge").reduced().with_(remat=False, attn_chunk=0)
+    p = A.init_attention(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(KEY, 6), (1, 12, cfg.d_model)) * 0.2
+    out = A.attention_forward(cfg, p, x)
+    # changing a FUTURE token changes the FIRST position's output
+    x2 = x.at[:, 11].set(3.0)
+    out2 = A.attention_forward(cfg, p, x2)
+    assert bool(jnp.any(jnp.abs(out[:, 0] - out2[:, 0]) > 1e-4))
+
+
+def test_adaptive_tau_beyond_paper():
+    from repro.core.ho_sgd import HOSGDConfig, make_adaptive_ho_sgd, run_method
+    def quad_loss(params, batch):
+        return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+    rng = np.random.default_rng(0)
+    def batches():
+        while True:
+            yield {"t": (1.0 + 0.1 * rng.normal(size=(16, 32))).astype(np.float32)}
+    meth = make_adaptive_ho_sgd(
+        quad_loss, HOSGDConfig(tau=8, mu=1e-4, m=4, lr=0.3, zo_lr=0.3 / 16),
+        tau_schedule=lambda t: 2 + t // 20)
+    hist = run_method(meth, {"x": jnp.zeros((32,))}, batches(), 80)
+    final = float(quad_loss(hist["params"], {"t": np.ones((1, 32), np.float32)}))
+    assert final < 0.1, final
+    assert 1 in hist["order"] and 0 in hist["order"]

@@ -1,0 +1,95 @@
+"""Baseline methods: semantics and sanity convergence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    HOSGDConfig, make_ho_sgd, make_pa_sgd, make_qsgd, make_ri_sgd,
+    make_sync_sgd, make_zo_svrg_ave, run_method,
+)
+from repro.core.baselines import quantize_qsgd, ri_shard_batch
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def quad_batches(m, B, d, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        yield {"t": (1.0 + 0.1 * rng.normal(size=(m * B, d))).astype(np.float32)}
+
+
+D_ = 32
+P0 = {"x": jnp.zeros((D_,))}
+
+
+def gap(hist):
+    return float(quad_loss(hist["params"], {"t": np.ones((1, D_), np.float32)}))
+
+
+def test_pa_sgd_tau1_equals_sync():
+    """Averaging every step == synchronous SGD (same gradients, same lr)."""
+    m, B = 4, 8
+    pa = make_pa_sgd(quad_loss, m, tau=1, lr=0.3)
+    sy = make_sync_sgd(quad_loss, m, lr=0.3)
+    h1 = run_method(pa, P0, quad_batches(m, B, D_), 15)
+    h2 = run_method(sy, P0, quad_batches(m, B, D_), 15)
+    np.testing.assert_allclose(np.asarray(h1["params"]["x"]),
+                               np.asarray(h2["params"]["x"]), rtol=1e-5)
+
+
+def test_pa_sgd_converges_and_comm_model():
+    m = 4
+    pa = make_pa_sgd(quad_loss, m, tau=8, lr=0.3)
+    assert gap(run_method(pa, P0, quad_batches(m, 8, D_), 100)) < 0.02
+    assert pa.comm_scalars(1000) == 1000 / 8
+
+
+def test_ri_sgd_runs_and_mixes():
+    m = 4
+    ri = make_ri_sgd(quad_loss, m, tau=4, lr=0.3, mu_r=0.25)
+    assert gap(run_method(ri, P0, quad_batches(m, 8, D_), 80,
+                          key=jax.random.key(0))) < 0.05
+    batch = {"t": np.arange(32, dtype=np.float32).reshape(32, 1).repeat(D_, 1)}
+    mixed = ri_shard_batch(batch, m, 0.25, jax.random.key(1))
+    assert mixed["t"].shape == batch["t"].shape
+    assert bool(jnp.any(mixed["t"] != jnp.asarray(batch["t"])))
+
+
+def test_ri_sgd_zero_redundancy_is_pa():
+    batch = {"t": np.ones((16, D_), np.float32)}
+    out = ri_shard_batch(batch, 4, 0.0, jax.random.key(0))
+    np.testing.assert_array_equal(np.asarray(out["t"]), batch["t"])
+
+
+def test_zo_svrg_ave_descends():
+    # ZO estimates scale with d: lr must be ~ lr_fo/d for stability
+    m = 4
+    dataset = {"t": np.ones((64, D_), np.float32)}
+    meth = make_zo_svrg_ave(quad_loss, m, mu=1e-3, lr=0.06 / D_,
+                            dataset=dataset, epoch_len=25)
+    hist = run_method(meth, {"x": jnp.full((D_,), 3.0)},
+                      quad_batches(m, 8, D_), 150)
+    assert gap(hist) < 0.7 * gap({"params": {"x": jnp.full((D_,), 3.0)}})
+
+
+def test_qsgd_quantizer_unbiased_and_bounded():
+    g = jax.random.normal(jax.random.key(0), (512,))
+    keys = jax.random.split(jax.random.key(1), 512)
+    qs = jax.vmap(lambda k: quantize_qsgd(g, 8, k))(keys)
+    err = jnp.mean(qs, 0) - g
+    # unbiased: the MEAN error is MC noise ~ (||g||/s)/sqrt(512) per element
+    assert float(jnp.mean(jnp.abs(err))) < 0.06
+    assert float(jnp.max(jnp.abs(err))) < 0.4
+    # quantized values live on the s-level grid scaled by ||g||
+    q = qs[0]
+    lv = jnp.abs(q) / jnp.linalg.norm(g) * 8
+    assert float(jnp.max(jnp.abs(lv - jnp.round(lv)))) < 1e-4
+
+
+def test_qsgd_converges():
+    m = 4
+    meth = make_qsgd(quad_loss, m, s=8, lr=0.3)
+    assert gap(run_method(meth, P0, quad_batches(m, 8, D_), 80,
+                          key=jax.random.key(2))) < 0.05

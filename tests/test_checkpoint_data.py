@@ -1,0 +1,92 @@
+"""Checkpointing roundtrips + data pipeline determinism."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+from repro.data import (
+    batches, make_classification, make_digits, parse_libsvm, token_batches,
+)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((5,), jnp.int32), "d": jnp.zeros((2, 2), jnp.bfloat16)},
+    }
+    path = save(str(tmp_path), 7, tree)
+    assert os.path.isdir(path)
+    got, step = restore(str(tmp_path), tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_checkpoint_latest_and_overwrite(tmp_path):
+    tree = {"x": jnp.ones((3,))}
+    save(str(tmp_path), 1, tree)
+    save(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+    save(str(tmp_path), 5, {"x": jnp.full((3,), 2.0)})  # atomic overwrite
+    got, _ = restore(str(tmp_path), tree)
+    np.testing.assert_array_equal(np.asarray(got["x"]), 2.0)
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    save(str(tmp_path), 0, {"x": jnp.ones((3,))})
+    with pytest.raises(ValueError, match="mismatch"):
+        restore(str(tmp_path), {"y": jnp.ones((3,))})
+
+
+# --------------------------------------------------------------------------- #
+def test_classification_datasets():
+    for name in ("sensorless", "acoustic", "covtype", "seismic"):
+        ds = make_classification(name, n_train=512, n_test=128)
+        from repro.data import DATASET_SPECS
+        d, c = DATASET_SPECS[name]
+        assert ds.x_train.shape == (512, d)
+        assert ds.n_classes == c
+        assert set(np.unique(ds.y_train)) <= set(range(c))
+        # standardized features
+        assert abs(ds.x_train.mean()) < 0.1
+    # determinism
+    a = make_classification("acoustic", n_train=64, n_test=16)
+    b = make_classification("acoustic", n_train=64, n_test=16)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+
+
+def test_batches_iterator():
+    ds = make_classification("seismic", n_train=256, n_test=64)
+    it = batches(ds, 32, seed=3)
+    b1, b2 = next(it), next(it)
+    assert b1["x"].shape == (32, ds.n_features)
+    assert not np.array_equal(b1["x"], b2["x"])
+
+
+def test_token_batches_labels_are_shifted():
+    it = token_batches(vocab=100, batch=4, seq=16, seed=0)
+    b = next(it)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 100
+
+
+def test_digits_surrogate_dimensions():
+    x, y = make_digits(n=128)
+    assert x.shape == (128, 900)  # the paper's attack dimension d = 900
+    assert x.min() >= -0.5 and x.max() <= 0.5
+    assert len(np.unique(y)) > 3
+
+
+def test_libsvm_parser(tmp_path):
+    f = tmp_path / "toy.train"
+    f.write_text("1 1:0.5 3:2.0\n2 2:-1.0\n1 1:1.5 2:0.25 3:-0.5\n")
+    x, y = parse_libsvm(str(f))
+    assert x.shape == (3, 3)
+    np.testing.assert_allclose(x[0], [0.5, 0.0, 2.0])
+    np.testing.assert_array_equal(y, [0, 1, 0])  # remapped to 0..C-1

@@ -1,0 +1,87 @@
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, all_configs, get_config, shape_applicable
+from repro.configs.base import config_for_shape
+
+
+def test_registry_complete():
+    assert len(ARCH_IDS) == 10
+    cfgs = all_configs()
+    assert {c.arch_type for c in cfgs.values()} == {
+        "dense", "moe", "ssm", "hybrid", "vlm", "audio"
+    }
+    for c in cfgs.values():
+        assert c.source, f"{c.name} must cite its source"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_published_dims(arch):
+    c = get_config(arch)
+    assert c.param_count() > 0
+    if c.has_attention:
+        assert c.n_heads % c.n_kv_heads == 0
+    assert len(c.layer_windows()) == c.n_layers
+    assert c.n_layers % c.pattern_period == 0
+
+
+def test_exact_assigned_dims():
+    c = get_config("arctic-480b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (35, 7168, 56, 8)
+    assert (c.n_experts, c.top_k, c.d_ff, c.vocab_size) == (128, 2, 4864, 32000)
+    q = get_config("qwen3-moe-235b-a22b")
+    assert (q.n_layers, q.d_model, q.top_k) == (94, 4096, 8)
+    f = get_config("falcon-mamba-7b")
+    assert (f.n_layers, f.d_model, f.ssm_state, f.d_ff) == (64, 4096, 16, 0)
+    h = get_config("hymba-1.5b")
+    assert (h.n_layers, h.d_model, h.n_heads, h.n_kv_heads) == (32, 1600, 25, 5)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_constraints(arch):
+    r = get_config(arch).reduced()
+    assert r.n_layers <= 4 and r.d_model <= 512 and r.n_experts <= 4
+
+
+def test_param_counts_match_scale():
+    # sanity: published total params within 2x of the name-plate number
+    expect = {
+        "phi3-mini-3.8b": 3.8e9, "gemma2-2b": 2.6e9, "falcon-mamba-7b": 7.3e9,
+        "starcoder2-3b": 3.0e9, "qwen3-14b": 14.8e9, "pixtral-12b": 12.4e9,
+        "hymba-1.5b": 1.5e9, "hubert-xlarge": 0.96e9, "arctic-480b": 482e9,
+        "qwen3-moe-235b-a22b": 235e9,
+    }
+    for arch, e in expect.items():
+        n = get_config(arch).param_count()
+        assert 0.5 * e < n < 2.0 * e, (arch, n, e)
+
+
+def test_shape_skip_rules():
+    # encoder-only: no decode
+    hub = get_config("hubert-xlarge")
+    assert not shape_applicable(hub, SHAPES["decode_32k"])[0]
+    assert not shape_applicable(hub, SHAPES["long_500k"])[0]
+    assert shape_applicable(hub, SHAPES["prefill_32k"])[0]
+    # pure full attention: no long_500k
+    for a in ("phi3-mini-3.8b", "qwen3-14b", "arctic-480b", "pixtral-12b",
+              "qwen3-moe-235b-a22b"):
+        assert not shape_applicable(get_config(a), SHAPES["long_500k"])[0], a
+    # ssm / hybrid / swa variants run long_500k
+    for a in ("falcon-mamba-7b", "hymba-1.5b", "gemma2-2b", "starcoder2-3b"):
+        assert shape_applicable(get_config(a), SHAPES["long_500k"])[0], a
+
+
+def test_long_context_variant_is_subquadratic():
+    for a in ("gemma2-2b", "starcoder2-3b", "hymba-1.5b"):
+        c = config_for_shape(get_config(a), SHAPES["long_500k"])
+        assert c.subquadratic, a
+
+
+def test_expected_pair_count():
+    n_ok = sum(
+        shape_applicable(get_config(a), s)[0]
+        for a in ARCH_IDS for s in SHAPES.values()
+    )
+    # 40 pairs - 7 documented skips (hubert x2 decode shapes; long_500k for
+    # the five pure-full-attention archs: phi3, pixtral, arctic, qwen3-14b,
+    # qwen3-moe)
+    assert n_ok == 33

@@ -1,0 +1,69 @@
+"""Pre-shared-seed direction generation: determinism, stats, consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import directions as D
+
+
+def test_hash_deterministic():
+    a = D.gaussian_from_salt((1000,), D.fold(1, 2, 3, 4))
+    b = D.gaussian_from_salt((1000,), D.fold(1, 2, 3, 4))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = D.gaussian_from_salt((1000,), D.fold(1, 2, 3, 5))
+    assert float(jnp.max(jnp.abs(a - c))) > 0.1
+
+
+def test_gaussian_stats():
+    g = D.gaussian_from_salt((200_000,), D.fold(7))
+    assert abs(float(jnp.mean(g))) < 0.01
+    assert abs(float(jnp.std(g)) - 1.0) < 0.01
+    # third/fourth moments of N(0,1)
+    assert abs(float(jnp.mean(g**3))) < 0.05
+    assert abs(float(jnp.mean(g**4)) - 3.0) < 0.1
+
+
+def test_offset_split_consistency():
+    """Generating a leaf in two halves with offsets == generating it whole
+    (this is what lets Pallas grid blocks agree with the jnp whole-tree gen)."""
+    salt = D.fold(42)
+    whole = D.gaussian_from_salt((512,), salt)
+    lo = D.gaussian_from_salt((256,), salt, offset=0)
+    hi = D.gaussian_from_salt((256,), salt, offset=256)
+    np.testing.assert_array_equal(np.asarray(whole), np.concatenate([lo, hi]))
+
+
+def test_sphere_direction_unit_norm():
+    params = {"a": jnp.zeros((100, 7)), "b": {"c": jnp.zeros((333,))}}
+    v = D.sphere_direction(params, seed=0, t=jnp.int32(3), worker=jnp.uint32(1))
+    ssq = sum(float(jnp.sum(x**2)) for x in jax.tree.leaves(v))
+    assert abs(ssq - 1.0) < 1e-5
+    assert jax.tree.structure(v) == jax.tree.structure(params)
+
+
+def test_workers_get_distinct_directions():
+    params = {"a": jnp.zeros((64,))}
+    vs = [
+        np.asarray(D.sphere_direction(params, 0, jnp.int32(0), jnp.uint32(i))["a"])
+        for i in range(4)
+    ]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            cos = float(np.dot(vs[i], vs[j]))
+            assert abs(cos) < 0.5, (i, j, cos)  # near-orthogonal in high dim
+
+
+def test_iterations_get_distinct_directions():
+    params = {"a": jnp.zeros((64,))}
+    v0 = np.asarray(D.sphere_direction(params, 0, jnp.int32(0), jnp.uint32(0))["a"])
+    v1 = np.asarray(D.sphere_direction(params, 0, jnp.int32(1), jnp.uint32(0))["a"])
+    assert abs(float(np.dot(v0, v1))) < 0.5
+
+
+def test_tree_dim_and_axpy():
+    params = {"a": jnp.ones((3, 4)), "b": jnp.zeros((5,), jnp.float32)}
+    assert D.tree_dim(params) == 17
+    v = {"a": jnp.full((3, 4), 2.0), "b": jnp.ones((5,))}
+    out = D.tree_axpy(0.5, v, params)
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.0)
+    np.testing.assert_allclose(np.asarray(out["b"]), 0.5)

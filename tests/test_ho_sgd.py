@@ -1,0 +1,94 @@
+"""HO-SGD algorithm semantics (Algorithm 1, §3.3 spectrum claims)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    HOSGDConfig, make_ho_sgd, make_sync_sgd, make_zo_sgd, run_method,
+)
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def quad_batches(m, B, d, noise=0.1, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        yield {"t": (1.0 + noise * rng.normal(size=(m * B, d))).astype(np.float32)}
+
+
+D_ = 64
+P0 = {"x": jnp.zeros((D_,))}
+
+
+def final_gap(hist):
+    return float(quad_loss(hist["params"], {"t": np.ones((1, D_), np.float32)}))
+
+
+def test_tau1_equals_sync_sgd_trajectory():
+    """§3.3: tau=1 reduces to fully synchronous SGD — identical trajectories."""
+    m, B = 4, 8
+    ho = make_ho_sgd(quad_loss, HOSGDConfig(tau=1, m=m, lr=0.3))
+    sync = make_sync_sgd(quad_loss, m, lr=0.3)
+    h1 = run_method(ho, P0, quad_batches(m, B, D_), 20)
+    h2 = run_method(sync, P0, quad_batches(m, B, D_), 20)
+    np.testing.assert_allclose(np.asarray(h1["params"]["x"]),
+                               np.asarray(h2["params"]["x"]), rtol=1e-6)
+    assert all(o == 1 for o in h1["order"])
+
+
+def test_order_schedule():
+    m, B, tau = 4, 4, 5
+    meth = make_ho_sgd(quad_loss, HOSGDConfig(tau=tau, m=m, lr=0.05,
+                                              zo_lr=0.05 / D_))
+    hist = run_method(meth, P0, quad_batches(m, B, D_), 12)
+    assert hist["order"] == [1 if t % tau == 0 else 0 for t in range(12)]
+
+
+def test_hybrid_converges():
+    m, B = 4, 8
+    meth = make_ho_sgd(quad_loss, HOSGDConfig(tau=8, m=m, lr=0.3, zo_lr=0.3 / 8,
+                                              mu=1e-4))
+    hist = run_method(meth, P0, quad_batches(m, B, D_), 200)
+    assert final_gap(hist) < 0.05, final_gap(hist)
+
+
+def test_zo_only_converges_slower_than_hybrid():
+    """Order comparison on equal footing: same lr on ZO steps."""
+    m, B, iters = 4, 8, 160
+    zo = make_zo_sgd(quad_loss, m, mu=1e-4, lr=0.3 / 8)
+    hy = make_ho_sgd(quad_loss, HOSGDConfig(tau=8, m=m, lr=0.3, zo_lr=0.3 / 8,
+                                            mu=1e-4))
+    g_zo = final_gap(run_method(zo, P0, quad_batches(m, B, D_), iters))
+    g_hy = final_gap(run_method(hy, P0, quad_batches(m, B, D_), iters))
+    assert g_hy < g_zo, (g_hy, g_zo)
+
+
+def test_cost_model_table1():
+    """Per-iteration comm/compute counters match Table 1 formulas."""
+    d = 10_000
+    hy = make_ho_sgd(quad_loss, HOSGDConfig(tau=8, m=4, lr=0.1))
+    assert hy.comm_scalars(d) == pytest.approx((8 - 1 + d) / 8)
+    assert hy.fevals(d) == pytest.approx(2 * 7 / 8)
+    assert hy.gevals(d) == pytest.approx(1 / 8)
+    sync = make_sync_sgd(quad_loss, 4, lr=0.1)
+    assert sync.comm_scalars(d) == d and sync.gevals(d) == 1.0
+    zo = make_zo_sgd(quad_loss, 4, mu=1e-3, lr=0.1)
+    assert zo.comm_scalars(d) == 1.0 and zo.fevals(d) == 2.0
+
+
+def test_zo_step_uses_two_fevals_per_worker():
+    """Count actual loss_fn invocations in a traced ZO step."""
+    calls = {"n": 0}
+
+    def counting_loss(params, batch):
+        calls["n"] += 1
+        return quad_loss(params, batch)
+
+    m = 3
+    meth = make_ho_sgd(counting_loss, HOSGDConfig(tau=1 << 30, m=m, lr=1e-3))
+    state = meth.init(P0)
+    batch = next(quad_batches(m, 2, D_))
+    meth.step(1, P0, state, batch)  # traces once: 2 evals per worker
+    assert calls["n"] == 2 * m

@@ -1,0 +1,89 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import directions as D
+from repro.core.baselines import quantize_qsgd
+from repro.models import transformer as T
+from repro.configs import get_config
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=st.integers(1, 2048), salt=st.integers(0, 2**32 - 1),
+       offset=st.integers(0, 2**20))
+@settings(**SETTINGS)
+def test_hash_gaussian_deterministic_and_finite(n, salt, offset):
+    a = D.gaussian_from_salt((n,), np.uint32(salt), offset)
+    b = D.gaussian_from_salt((n,), np.uint32(salt), offset)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert bool(jnp.all(jnp.isfinite(a)))
+    assert float(jnp.max(jnp.abs(a))) < 7.0  # 24-bit Box-Muller tail bound
+
+
+@given(n=st.integers(2, 512), split=st.integers(1, 511),
+       salt=st.integers(0, 2**31))
+@settings(**SETTINGS)
+def test_hash_offset_additivity(n, split, salt):
+    """Any split of a leaf generates identical values — the invariant that
+    makes Pallas-block, per-shard, and whole-tree generation agree."""
+    split = split % n or 1
+    whole = np.asarray(D.gaussian_from_salt((n,), np.uint32(salt)))
+    a = np.asarray(D.gaussian_from_salt((split,), np.uint32(salt), 0))
+    b = np.asarray(D.gaussian_from_salt((n - split,), np.uint32(salt), split))
+    np.testing.assert_array_equal(whole, np.concatenate([a, b]))
+
+
+@given(shapes=st.lists(st.tuples(st.integers(1, 8), st.integers(1, 8)),
+                       min_size=1, max_size=4),
+       seed=st.integers(0, 1000), t=st.integers(0, 1000), w=st.integers(0, 64))
+@settings(**SETTINGS)
+def test_sphere_direction_always_unit(shapes, seed, t, w):
+    params = {f"p{i}": jnp.zeros(s) for i, s in enumerate(shapes)}
+    v = D.sphere_direction(params, seed, jnp.int32(t), jnp.uint32(w))
+    ssq = sum(float(jnp.sum(x**2)) for x in jax.tree.leaves(v))
+    assert abs(ssq - 1.0) < 1e-4
+
+
+@given(s=st.integers(1, 64), scale=st.floats(0.1, 100.0),
+       seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_qsgd_preserves_sign_and_zero(s, scale, seed):
+    g = jnp.asarray(np.random.default_rng(seed).normal(size=64) * scale,
+                    jnp.float32)
+    q = quantize_qsgd(g, s, jax.random.key(seed))
+    assert bool(jnp.all((q == 0) | (jnp.sign(q) == jnp.sign(g))))
+    assert bool(jnp.all(jnp.abs(q) <= jnp.linalg.norm(g) * (1 + 1e-5)))
+
+
+@given(B=st.integers(1, 3), S=st.integers(2, 12), V=st.integers(8, 90),
+       chunk=st.integers(3, 33), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_streaming_ce_equals_dense(B, S, V, chunk, seed):
+    """The vocab-chunked CE is exactly the dense CE for any (V, chunk)."""
+    cfg = get_config("phi3-mini-3.8b").reduced().with_(
+        vocab_size=V, ce_chunk=chunk, n_layers=2)
+    rng = np.random.default_rng(seed)
+    head = jnp.asarray(rng.normal(size=(cfg.d_model, V)), jnp.float32)
+    h = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32)
+    labels = jnp.asarray(rng.integers(-1, V, (B, S)), jnp.int32)
+    got = T.cross_entropy_streaming(cfg, head, h, labels)
+    want = T.cross_entropy(jnp.einsum("bsd,dv->bsv", h, head), labels)
+    if bool(jnp.any(labels >= 0)):
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-4, atol=1e-5)
+
+
+@given(seed=st.integers(0, 30), chunk=st.sampled_from([2, 3, 5, 8]))
+@settings(max_examples=10, deadline=None)
+def test_chunked_attention_equals_dense(seed, chunk):
+    from repro.models import attention as A
+    cfg = get_config("qwen3-14b").reduced().with_(attn_chunk=chunk, remat=False)
+    p = A.init_attention(jax.random.key(seed), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(2, 16, cfg.d_model)),
+                    jnp.float32) * 0.1
+    got = A.attention_forward(cfg, p, x, jnp.int32(1 << 30))
+    want = A.attention_forward(cfg.with_(attn_chunk=0), p, x, jnp.int32(1 << 30))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)

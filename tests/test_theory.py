@@ -1,0 +1,69 @@
+"""Theorem 1 / Table 1 analytic reproductions."""
+import math
+
+import pytest
+
+from repro.core.theory import (
+    Problem, convergence_order, min_iterations, table1_row, theorem1_bound,
+    theorem_mu,
+)
+
+
+def test_bound_decreases_with_N():
+    p1 = Problem(d=1000, m=8, B=16, N=10_000_000)
+    p2 = Problem(d=1000, m=8, B=16, N=40_000_000)
+    b1 = theorem1_bound(p1, tau=8)["total"]
+    b2 = theorem1_bound(p2, tau=8)["total"]
+    assert b2 < b1
+    # rate ~ 1/sqrt(N): quadrupling N halves the bound (within 10%)
+    assert b2 == pytest.approx(b1 / 2, rel=0.15)
+
+
+def test_tau1_drops_zo_terms():
+    p = Problem(d=1000, m=8, B=16, N=10_000_000)
+    b = theorem1_bound(p, tau=1)
+    assert set(b) == {"fo_descent", "fo_variance", "total"}
+
+
+def test_remark1_orders():
+    p = Problem(d=500, m=4, B=8, N=1_000_000)
+    assert convergence_order(p, tau=8) == pytest.approx(
+        p.d / math.sqrt(p.m * p.N))
+    assert convergence_order(p, tau=1) == pytest.approx(
+        1 / math.sqrt(p.m * p.N))
+
+
+def test_dominant_term_is_zo_variance_for_large_d():
+    """Remark 2: the d*sigma^2 ZO-variance term dominates for tau>1."""
+    p = Problem(d=100_000, m=8, B=16, N=10**9)
+    b = theorem1_bound(p, tau=8)
+    assert b["zo_variance_1"] == max(
+        v for k, v in b.items() if k != "total")
+
+
+def test_min_iterations_condition():
+    p = Problem(d=900, m=5, B=5, N=0)
+    n = min_iterations(p)
+    assert n > 16 * (900 + 25 - 1) ** 2 / 25 - 1
+    assert theorem_mu(Problem(d=900, m=5, B=5, N=n)) <= 1 / math.sqrt(900 * n) + 1e-12
+
+
+def test_table1_comm_ordering():
+    """Comm per iter: ZO (1) < HO ((tau-1+d)/tau) < RI (d/tau, tau<d) < sync (d)."""
+    p = Problem(d=1_690_000, m=4, B=64, N=100_000)
+    tau = 8
+    comm = {k: table1_row(k, p, tau=tau)["comm"] for k in
+            ("zo_sgd", "ho_sgd", "ri_sgd", "sync_sgd")}
+    assert comm["zo_sgd"] < comm["ho_sgd"] < comm["sync_sgd"]
+    assert comm["ri_sgd"] < comm["sync_sgd"]
+    # the paper's ratio claim: HO comm = (1 + (tau-1)/d) x RI-SGD's d/tau
+    assert comm["ho_sgd"] / comm["ri_sgd"] == pytest.approx(
+        1 + (tau - 1) / p.d, rel=1e-6)
+
+
+def test_table1_compute_ordering():
+    """Normalized compute: ZO (1/d) < HO (1/tau + 1/d) < sync (1) < RI (1+mu*m)."""
+    p = Problem(d=1_690_000, m=4, B=64, N=100_000)
+    comp = {k: table1_row(k, p, tau=8)["comp"] for k in
+            ("zo_sgd", "ho_sgd", "sync_sgd", "ri_sgd")}
+    assert comp["zo_sgd"] < comp["ho_sgd"] < comp["sync_sgd"] < comp["ri_sgd"]
