@@ -2,6 +2,8 @@
 
 Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
   table1  — conv-order / comm / compute columns (analytic, Table 1)
+  comm    — measured (CommLedger) vs analytic communication curves
+            across tau and the FO-compressor zoo
   fig1    — adversarial-example generation (measured, Fig 1 + Table 2)
   fig2    — multiclass MLP training (measured, Fig 2)
   kernels — Pallas kernel micro-benches + HBM-byte models
@@ -20,11 +22,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     choices=["table1", "fig1", "fig2", "kernels", "roofline",
-                             "tau"])
+                             "tau", "comm"])
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
-    sections = args.only or ["table1", "kernels", "fig1", "fig2", "tau",
-                             "roofline"]
+    sections = args.only or ["table1", "comm", "kernels", "fig1", "fig2",
+                             "tau", "roofline"]
     failed = []
 
     for sec in sections:
@@ -33,6 +35,10 @@ def main(argv=None):
             if sec == "table1":
                 from benchmarks import table1
                 table1.main()
+            elif sec == "comm":
+                from benchmarks import comm_curves
+                comm_curves.main(
+                    ["--d", "1024", "--iters", "8"] if args.quick else [])
             elif sec == "fig1":
                 from benchmarks import fig1_attack
                 if args.quick:

@@ -1,0 +1,53 @@
+"""jax version compatibility: one place that knows both API generations.
+
+The codebase targets the current jax API (``jax.set_mesh``,
+``jax.shard_map(..., axis_names=..., check_vma=...)``); this container ships
+jax 0.4.37, where those live under different names/signatures.  No new
+dependencies — just dispatch on what the installed jax exposes.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional, Set
+
+import jax
+
+
+# jax 0.4.x's experimental shard_map accepts partial-auto (``auto=``), but
+# the 0.4.x SPMD partitioner aborts on any collective inside the manual
+# region (PartitionId UNIMPLEMENTED / IsManualSubgroup CHECK at
+# spmd_partitioner.cc:512, reproduced on CPU 0.4.37).  Callers that need
+# collectives under partial-auto must branch on this and fall back to an
+# auto-sharded (GSPMD) formulation.
+HAS_PARTIAL_AUTO_COLLECTIVES = hasattr(jax, "shard_map")
+
+
+def set_mesh(mesh):
+    """``with set_mesh(mesh):`` — jax.set_mesh when present, else the legacy
+    global-mesh context (``with mesh:``), which is what 0.4.x pjit reads."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(jax.sharding, "use_mesh"):
+        return jax.sharding.use_mesh(mesh)
+    return mesh  # Mesh is itself a context manager on 0.4.x
+
+
+def shard_map(f, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None, check_vma: bool = True):
+    """New-API partial-auto shard_map (``axis_names`` = the manual axes).
+
+    Deliberately NOT bridged to 0.4.x's jax.experimental.shard_map: its
+    ``auto=`` form exists but the partitioner aborts on any collective in
+    the manual region (see HAS_PARTIAL_AUTO_COLLECTIVES above), so a
+    translation layer would only move the crash from import time to compile
+    time.  Callers must gate on HAS_PARTIAL_AUTO_COLLECTIVES and use an
+    auto-sharded formulation on old jax (core.distributed.make_zo_step does).
+    """
+    assert HAS_PARTIAL_AUTO_COLLECTIVES, \
+        "partial-auto shard_map is unusable on jax 0.4.x; gate on " \
+        "compat.HAS_PARTIAL_AUTO_COLLECTIVES"
+    kw = {}
+    if axis_names is not None:
+        kw["axis_names"] = set(axis_names)
+    return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=check_vma, **kw)

@@ -88,15 +88,19 @@ def make_ho_sgd(
     def zo_step(t, params, opt_state, batch):
         """Eq. (4)-(6): per-worker scalar coefficients, shared reconstruction."""
         dim = D.tree_dim(params)
-        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        adt = jnp.dtype(cfg.acc_dtype)   # same accumulator knob as distributed
+        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
         loss_acc = jnp.float32(0.0)
         for i in range(cfg.m):  # static unroll: workers are a mesh property
             batch_i = jax.tree.map(lambda x: x[i], batch)
             v = D.sphere_direction(params, cfg.seed, t, jnp.uint32(i))
             c, f0 = zo_coefficient(loss_fn, params, batch_i, v, cfg.mu, dim)
-            acc = jax.tree.map(lambda a, x: a + c * x.astype(jnp.float32), acc, v)
+            acc = jax.tree.map(
+                lambda a, x: (a.astype(jnp.float32)
+                              + c * x.astype(jnp.float32)).astype(adt), acc, v)
             loss_acc = loss_acc + f0
-        g_hat = jax.tree.map(lambda a: a * (cfg.zo_scale / cfg.m), acc)
+        g_hat = jax.tree.map(
+            lambda a: a.astype(jnp.float32) * (cfg.zo_scale / cfg.m), acc)
         deltas, opt_state = opt.update(g_hat, opt_state, params, t)
         return apply_deltas(params, deltas), opt_state, loss_acc / cfg.m
 
@@ -139,22 +143,36 @@ def make_adaptive_ho_sgd(
     returns the current period; an FO step fires whenever the position
     within the current period wraps.
     """
+    # the base method's ZO branch is keyed on t % cfg.tau != 0 — with tau=1
+    # it is unreachable and every "ZO" step would silently run fo_step
+    assert cfg.tau > 1, "make_adaptive_ho_sgd needs cfg.tau >= 2"
     base = make_ho_sgd(loss_fn, cfg, opt, name="ho_sgd_adaptive")
-    state_holder = {"since_fo": 0}
+
+    # The since-FO counter lives IN the method state (not a closure): two
+    # run_method calls on the same Method must not leak schedule position
+    # into each other, and init() must restart the schedule from an FO step.
+    def init(params):
+        return {"base": base.init(params), "since_fo": 0}
 
     def step(t: int, params, state, batch, key=None):
         tau_t = max(1, int(tau_schedule(t)))
-        if t == 0 or state_holder["since_fo"] + 1 >= tau_t:
-            state_holder["since_fo"] = 0
+        since_fo = state["since_fo"]
+        if t == 0 or since_fo + 1 >= tau_t:
             # reuse the base method's FO branch (t=0 always maps to FO)
-            return base.step(0 if t == 0 else cfg.tau * max(t, 1), params,
-                             state, batch, key)
-        state_holder["since_fo"] += 1
-        # any t with t % cfg.tau != 0 runs the ZO branch; keep t for seeds
-        t_zo = t if t % cfg.tau != 0 else t + 1
-        return base.step(t_zo, params, state, batch, key)
+            params, bstate, metrics = base.step(
+                0 if t == 0 else cfg.tau * max(t, 1), params, state["base"],
+                batch, key)
+            return params, {"base": bstate, "since_fo": 0}, metrics
+        # the ZO branch needs t_zo % cfg.tau != 0; map t to the t-th positive
+        # integer not divisible by cfg.tau — injective, so no two adaptive ZO
+        # steps ever share a direction seed (t+1 collided with the next step
+        # whenever t was a multiple of cfg.tau: identical perturbations twice)
+        t_zo = t + 1 + t // (cfg.tau - 1)
+        params, bstate, metrics = base.step(t_zo, params, state["base"],
+                                            batch, key)
+        return params, {"base": bstate, "since_fo": since_fo + 1}, metrics
 
-    return base._replace(name="ho_sgd_adaptive", step=step)
+    return base._replace(name="ho_sgd_adaptive", init=init, step=step)
 
 
 def make_sync_sgd(loss_fn, m: int, lr: float, momentum: float = 0.0) -> Method:

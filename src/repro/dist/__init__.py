@@ -1,0 +1,32 @@
+"""repro.dist — sharding specs + instrumented, compression-aware collectives.
+
+The distributed substrate every layer builds on:
+  * ``sharding`` — the single source of truth for PartitionSpecs (worker
+    axes, tensor/FSDP param specs, batch and serving-cache specs).
+  * ``collectives`` — jax.lax collective wrappers + the ``CommLedger`` that
+    measures the paper's Table-1 communication load in bytes.
+  * ``compress`` — QSGD / signSGD / top-k codecs hookable onto the FO
+    all-reduce, with wire-byte estimates fed to the ledger.
+"""
+from repro.dist.collectives import (  # noqa: F401
+    CommLedger,
+    all_gather,
+    note_all_reduce,
+    pmean,
+    psum,
+)
+from repro.dist.compress import (  # noqa: F401
+    Compressor,
+    compress_tree,
+    get_compressor,
+    qsgd,
+    signsgd,
+    topk,
+)
+from repro.dist.sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    n_workers,
+    param_specs,
+    worker_axes,
+)

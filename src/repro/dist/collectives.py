@@ -1,0 +1,172 @@
+"""Instrumented collectives: thin ``jax.lax`` wrappers + a byte ledger.
+
+The paper's headline claim is a *communication load*: (tau-1+d)/tau scalars
+per worker per iteration for HO-SGD vs d for sync-SGD (Table 1).  The
+``CommLedger`` turns that from an analytic formula into a measured quantity:
+every collective routed through this module records its logical payload
+bytes (per worker) at trace time, and the ledger accumulates those bytes per
+host-level step call.
+
+How it composes with jit: ``ledger.wrap(name, fn)`` returns a callable that
+(a) marks the ledger active while ``fn`` runs — so the wrappers below, hit
+during the jit *trace*, register the program's per-step byte records — and
+(b) bumps the step counter on every call.  jit caches the trace, so records
+register once per program and the counter does the per-step accounting;
+a retrace (new shapes) simply re-registers the program's records.
+
+Accounting semantics (documented contract — Table-1 tests rely on it):
+  * ``all_gather``: bytes of the *gathered result* per worker — m scalars
+    gathered over m workers is ``4*m`` bytes, independent of d.
+  * ``psum``/``pmean`` and ``note_all_reduce``: bytes of the reduced payload
+    per worker — a d-dim fp32 gradient all-reduce is ``4*d`` bytes.
+  * ``payload=False`` marks diagnostics (e.g. averaging the monitoring loss)
+    that are *not* part of the algorithm's communication; they appear in the
+    per-kind breakdown but are excluded from ``bytes_per_step``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Axes = Union[str, Sequence[str]]
+
+_ACTIVE: List[Tuple["CommLedger", str]] = []
+
+
+@dataclass
+class _Record:
+    kind: str
+    tag: str
+    nbytes: int
+    payload: bool
+
+
+@dataclass
+class CommLedger:
+    """Host-side per-program byte accounting for collectives."""
+
+    programs: Dict[str, List[_Record]] = field(default_factory=dict)
+    steps: Dict[str, int] = field(default_factory=dict)
+    _recording: Optional[List[_Record]] = None
+
+    # --- registration (trace time) ------------------------------------------
+    def record(self, kind: str, nbytes: int, *, tag: str = "",
+               payload: bool = True) -> None:
+        if self._recording is not None:
+            self._recording.append(_Record(kind, tag, int(nbytes), payload))
+
+    # --- program wrapping ----------------------------------------------------
+    def wrap(self, name: str, fn):
+        """Instrument a step callable. Wrap BEFORE the first (tracing) call."""
+        def wrapped(*args, **kwargs):
+            self._recording, saved = [], self._recording
+            _ACTIVE.append((self, name))
+            try:
+                out = fn(*args, **kwargs)
+            finally:
+                _ACTIVE.pop()
+                recorded, self._recording = self._recording, saved
+            if recorded:                      # fresh trace: (re)register program
+                self.programs[name] = recorded
+            self.steps[name] = self.steps.get(name, 0) + 1
+            return out
+        return wrapped
+
+    # --- queries --------------------------------------------------------------
+    def bytes_per_step(self, name: str, payload_only: bool = True) -> int:
+        return sum(r.nbytes for r in self.programs.get(name, [])
+                   if r.payload or not payload_only)
+
+    def total_bytes(self, payload_only: bool = True) -> int:
+        return sum(self.bytes_per_step(n, payload_only) * s
+                   for n, s in self.steps.items())
+
+    def by_kind(self, name: str) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for r in self.programs.get(name, []):
+            key = f"{r.kind}:{r.tag}" if r.tag else r.kind
+            out[key] = out.get(key, 0) + r.nbytes
+        return out
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            name: {
+                "steps": self.steps.get(name, 0),
+                "bytes_per_step": self.bytes_per_step(name),
+                "bytes_total": self.bytes_per_step(name) * self.steps.get(name, 0),
+                "by_kind": self.by_kind(name),
+            }
+            for name in sorted(set(self.programs) | set(self.steps))
+        }
+
+    def reset(self) -> None:
+        self.steps.clear()
+
+
+def _record_active(kind: str, nbytes: int, tag: str, payload: bool) -> None:
+    if _ACTIVE:
+        _ACTIVE[-1][0].record(kind, nbytes, tag=tag, payload=payload)
+
+
+def _tree_nbytes(tree: Any) -> int:
+    return sum(int(x.size) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+# --------------------------------------------------------------------------- #
+# traced wrappers (call inside jit / shard_map bodies)
+# --------------------------------------------------------------------------- #
+def all_gather(x: jax.Array, axes: Axes, *, tiled: bool = False,
+               tag: str = "", payload: bool = True) -> jax.Array:
+    """``jax.lax.all_gather`` that books the gathered result's bytes.
+
+    The ZO step's entire inter-worker traffic goes through here: one fp32
+    scalar per worker gathered over m workers books exactly ``4*m`` bytes.
+    """
+    out = jax.lax.all_gather(x, axis_name=tuple(axes) if not isinstance(axes, str) else axes,
+                             tiled=tiled)
+    _record_active("all_gather", int(out.size) * out.dtype.itemsize, tag, payload)
+    return out
+
+
+def psum(x: Any, axes: Axes, *, tag: str = "", payload: bool = True) -> Any:
+    out = jax.lax.psum(x, tuple(axes) if not isinstance(axes, str) else axes)
+    _record_active("psum", _tree_nbytes(out), tag, payload)
+    return out
+
+
+def pmean(x: Any, axes: Axes, *, tag: str = "", payload: bool = True) -> Any:
+    out = jax.lax.pmean(x, tuple(axes) if not isinstance(axes, str) else axes)
+    _record_active("pmean", _tree_nbytes(out), tag, payload)
+    return out
+
+
+def note(kind: str, tree: Any, *, nbytes: Optional[int] = None,
+         tag: str = "", payload: bool = True) -> Any:
+    """Book a collective without emitting one (identity in the program).
+
+    For exchanges the compiled program realizes some other way — GSPMD-
+    inserted reductions, or the auto-mode ZO fallback on old jax where the
+    coefficient gather is materialized by the partitioner rather than an
+    explicit ``all_gather`` op.  ``tree``'s bytes are booked unless
+    ``nbytes`` overrides (compressed wire formats).
+    """
+    _record_active(kind, _tree_nbytes(tree) if nbytes is None else int(nbytes),
+                   tag, payload)
+    return tree
+
+
+def note_all_reduce(tree: Any, *, nbytes: Optional[int] = None,
+                    tag: str = "", payload: bool = True) -> Any:
+    """Book an all-reduce that XLA inserts implicitly (GSPMD data parallelism).
+
+    The FO step's d-dim gradient reduction is not an explicit ``psum`` — the
+    partitioner materializes it from the sharded-batch/replicated-params
+    math — so the step books it here at trace time.  Returns ``tree``
+    unchanged (identity in the compiled program).  Pass ``nbytes`` to book a
+    different wire size than the tree's (compressed all-reduce).
+    """
+    return note("all_reduce", tree, nbytes=nbytes, tag=tag, payload=payload)

@@ -1,0 +1,118 @@
+"""Gradient codecs for the FO all-reduce: QSGD, signSGD, top-k.
+
+Each codec is an (encode, decode) pair over flat fp32 vectors plus a
+bytes-on-the-wire estimate that feeds the ``CommLedger`` — so a compressed
+FO step books its *actual* wire cost instead of 4*d (QSGD: Alistarh et al.
+2017; signSGD: Bernstein et al. 2018; top-k: Aji & Heafield 2017).
+
+The distributed step applies ``decode(encode(g))`` inside the jitted program
+(simulating what every worker would receive after a compressed all-reduce)
+and books ``nbytes(d)`` in place of the dense gradient's bytes.  Encoding is
+unbiased where the original scheme is (QSGD's stochastic rounding uses a
+fold-in of the step counter, so the program stays a pure function of t).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Compressor:
+    """encode: (flat fp32, key) -> code pytree; decode: code -> flat fp32."""
+    name: str
+    encode: Callable[[jax.Array, jax.Array], Any]
+    decode: Callable[[Any], jax.Array]
+    nbytes: Callable[[int], int]          # d -> wire bytes per worker
+
+
+# --------------------------------------------------------------------------- #
+# QSGD — s-level stochastic quantization
+# --------------------------------------------------------------------------- #
+def qsgd(s: int = 4) -> Compressor:
+    bits = max(1, math.ceil(math.log2(s + 1))) + 1   # level bits + sign bit
+
+    def encode(g: jax.Array, key) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        norm = jnp.linalg.norm(g) + 1e-30
+        level = jnp.abs(g) / norm * s
+        lower = jnp.floor(level)
+        bump = jax.random.bernoulli(key, level - lower)
+        q = (lower + bump).astype(jnp.int8 if s < 127 else jnp.int32)
+        return norm, jnp.sign(g).astype(jnp.int8), q
+
+    def decode(code) -> jax.Array:
+        norm, sign, q = code
+        return sign.astype(jnp.float32) * norm * q.astype(jnp.float32) / s
+
+    return Compressor(
+        f"qsgd{s}", encode, decode,
+        nbytes=lambda d: 4 + (d * bits + 7) // 8,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# signSGD — 1 bit per coordinate + one scale
+# --------------------------------------------------------------------------- #
+def signsgd() -> Compressor:
+    def encode(g: jax.Array, key) -> Tuple[jax.Array, jax.Array]:
+        return jnp.mean(jnp.abs(g)), jnp.sign(g).astype(jnp.int8)
+
+    def decode(code) -> jax.Array:
+        scale, sign = code
+        return scale * sign.astype(jnp.float32)
+
+    return Compressor("signsgd", encode, decode,
+                      nbytes=lambda d: 4 + (d + 7) // 8)
+
+
+# --------------------------------------------------------------------------- #
+# top-k — k (index, value) pairs
+# --------------------------------------------------------------------------- #
+def topk(frac: float = 0.01, k: Optional[int] = None) -> Compressor:
+    def k_of(d: int) -> int:
+        return max(1, min(d, k if k is not None else int(round(frac * d))))
+
+    def encode(g: jax.Array, key) -> Tuple[jax.Array, jax.Array, int]:
+        kk = k_of(g.size)
+        _, idx = jax.lax.top_k(jnp.abs(g), kk)
+        return idx.astype(jnp.int32), g[idx], g.size
+
+    def decode(code) -> jax.Array:
+        idx, vals, d = code
+        return jnp.zeros((d,), jnp.float32).at[idx].set(vals)
+
+    return Compressor("topk", encode, decode,
+                      nbytes=lambda d: 8 * k_of(d))      # int32 idx + fp32 val
+
+
+_REGISTRY = {"qsgd": qsgd, "signsgd": signsgd, "topk": topk}
+
+
+def get_compressor(name: Optional[str], **kw) -> Optional[Compressor]:
+    """'qsgd' | 'signsgd' | 'topk' | 'none'/None -> Compressor or None."""
+    if name is None or name in ("none", ""):
+        return None
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown compressor {name!r}; options: "
+                         f"{sorted(_REGISTRY)} or 'none'")
+    return _REGISTRY[name](**kw)
+
+
+def compress_tree(comp: Compressor, tree: Any, key: jax.Array) -> Tuple[Any, int]:
+    """decode(encode(leaf)) every leaf; returns (tree', total wire bytes).
+
+    The byte total is a static (host-side) int — it feeds the ledger at
+    trace time; the returned tree keeps each leaf's shape and dtype.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    out, nbytes = [], 0
+    for i, g in enumerate(leaves):
+        flat = g.reshape(-1).astype(jnp.float32)
+        dec = comp.decode(comp.encode(flat, jax.random.fold_in(key, i)))
+        out.append(dec.reshape(g.shape).astype(g.dtype))
+        nbytes += comp.nbytes(flat.size)
+    return jax.tree.unflatten(treedef, out), nbytes

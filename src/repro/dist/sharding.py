@@ -1,0 +1,195 @@
+"""Sharding-spec contract for the whole system (train, dry-run, serving).
+
+One module owns every PartitionSpec decision so the FO step, the ZO step,
+the data pipeline, and the serving path all agree on where tensors live:
+
+* **worker axes** — the paper's m workers are the ``("pod", "data")`` mesh
+  axes (whichever exist).  The ZO step runs *manual* (shard_map) over them;
+  the FO step leaves them to GSPMD data parallelism.  Param specs therefore
+  never name a worker axis — except under ``cfg.fsdp``, where the ``data``
+  axis additionally shards weights (ZeRO-style) and the manual worker axis
+  collapses to ``pod`` (see ``core.distributed.make_zo_step``).
+* **model axis** — tensor parallelism: column-parallel projections shard
+  their output dim, row-parallel projections their input dim (Megatron
+  convention), expert FFNs shard the hidden dim (``moe_sharding='tensor'``)
+  or the expert dim (``'expert'``).
+* Every rule is divisibility-guarded: a dim that doesn't divide the axis
+  size is replicated rather than producing an unshardable program, so the
+  same code drives a 512-chip pod and a 1x1 CPU test mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.tree_util import DictKey, tree_map_with_path
+
+WORKER_AXIS_ORDER = ("pod", "data")
+
+# column-parallel weights: shard the *last* dim over the model axis
+_COL_PARALLEL = {"wq", "wk", "wv", "wg", "wu", "in_proj", "dt_w", "head"}
+# row-parallel weights: shard dim -2 (the contraction dim) over the model axis
+_ROW_PARALLEL = {"wo", "wd", "out_proj", "x_proj", "A_log"}
+# never sharded on the model axis (tiny, or consumed elementwise everywhere)
+_REPLICATED = {"router", "conv_w", "conv_b", "dt_b", "D", "scale", "bias",
+               "q_norm", "k_norm", "attn_out_scale", "mamba_out_scale"}
+
+
+def worker_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The manual worker axes: ``("pod", "data")`` ∩ mesh, in that order."""
+    return tuple(a for a in WORKER_AXIS_ORDER if a in mesh.shape)
+
+
+def n_workers(mesh: Mesh) -> int:
+    """m — the paper's worker count — for this mesh."""
+    n = 1
+    for a in worker_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape.get(axis, 1)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(str(k.key) for k in path if isinstance(k, DictKey))
+
+
+def _leaf_spec(cfg, mesh: Mesh, names: Tuple[str, ...], shape) -> P:
+    """Spec for one parameter leaf, identified by its dict path."""
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) > 1 else ""
+    stacked = bool(names) and names[0] == "layers"   # leading (L, ...) dim
+    off = 1 if stacked else 0
+    ndim = len(shape)
+    parts: list = [None] * ndim
+    ms = _axis_size(mesh, "model")
+    ds = _axis_size(mesh, "data")
+    fsdp = bool(getattr(cfg, "fsdp", False)) and "data" in mesh.shape
+
+    def put(dim: int, axis: str, size: int) -> bool:
+        if 0 <= dim < ndim and parts[dim] is None and shape[dim] % size == 0:
+            parts[dim] = axis
+            return True
+        return False
+
+    # --- model axis: tensor parallelism --------------------------------------
+    if "model" in mesh.shape and name not in _REPLICATED and ndim - off >= 2:
+        is_expert = parent == "moe" and name in ("wg", "wu", "wd")
+        if is_expert and getattr(cfg, "moe_sharding", "tensor") == "expert":
+            put(off, "model", ms)                    # expert-parallel: E dim
+        elif name == "embed":
+            put(ndim - 2, "model", ms)               # vocab rows over model
+        elif name in _COL_PARALLEL:
+            put(ndim - 1, "model", ms)
+        elif name in _ROW_PARALLEL:
+            put(ndim - 2, "model", ms)
+
+    # --- data axis: ZeRO/FSDP weight sharding (cfg.fsdp only) ----------------
+    if fsdp and ndim - off >= 1 and name != "router":
+        if parent == "moe" and name in ("wg", "wu", "wd"):
+            # expert dim over data — must match moe._expert_spec's dispatch
+            # constraint or the (E, C, ...) tensors fight the weights
+            put(off, "data", ds)
+        else:
+            # largest still-unsharded dim (ties -> earliest), vectors included
+            order = sorted(range(off, ndim), key=lambda i: (-shape[i], i))
+            for dim in order:
+                if put(dim, "data", ds):
+                    break
+
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def param_specs(cfg, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for a model param tree (works on ShapeDtypeStructs).
+
+    Only names *auto* axes: ``model`` always, ``data`` additionally when
+    ``cfg.fsdp`` — never ``pod``.  The ZO step relies on this: inside its
+    manual (worker-axes) shard_map these same specs constrain the hashed
+    direction leaves without referencing a manual axis.
+    """
+    return tree_map_with_path(
+        lambda path, x: _leaf_spec(cfg, mesh, _path_names(path), x.shape),
+        params,
+    )
+
+
+def batch_specs(mesh: Mesh, batch: Any) -> Any:
+    """Shard every batch leaf's leading dim over the worker axes.
+
+    Leaves whose leading dim doesn't divide the worker count (or 0-d leaves)
+    are replicated — e.g. a scalar position index in a decode batch.
+    """
+    wa = worker_axes(mesh)
+    m = n_workers(mesh)
+
+    def spec(x) -> P:
+        shape = getattr(x, "shape", ())
+        if not wa or not shape or shape[0] % m:
+            return P()
+        return P(wa)
+
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(cfg, mesh: Mesh, caches: Any, seq_sharded: bool = False) -> Any:
+    """Decode/prefill cache shardings (stacked per-layer pytrees).
+
+    * ``k``/``v`` (L, B, S, KV, hd): batch over the worker axes; the kv-head
+      dim over ``model``, falling back to head_dim when KV doesn't divide
+      (GQA archs with few kv heads on a wide model axis).
+    * ``conv`` (L, B, K-1, di) / ``ssm`` (L, B, di, n): batch over workers,
+      d_inner over ``model``.
+    * ``seq_sharded`` (long_500k, batch=1): the attention cache *sequence*
+      dim carries the worker axes instead of batch.
+    """
+    wa = worker_axes(mesh)
+    m = n_workers(mesh)
+    ms = _axis_size(mesh, "model")
+
+    def spec(path, x) -> P:
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = x.shape
+        parts: list = [None] * len(shape)
+        if name in ("k", "v") and len(shape) == 5:
+            L, B, S, KV, hd = shape
+            if seq_sharded:
+                if wa and S % m == 0:
+                    parts[2] = wa
+            elif wa and B % m == 0:
+                parts[1] = wa
+            if "model" in mesh.shape:
+                if KV % ms == 0 and ms > 1:
+                    parts[3] = "model"
+                elif hd % ms == 0:
+                    parts[4] = "model"
+        elif name == "conv" and len(shape) == 4:
+            if wa and not seq_sharded and shape[1] % m == 0:
+                parts[1] = wa
+            if "model" in mesh.shape and shape[3] % ms == 0:
+                parts[3] = "model"
+        elif name == "ssm" and len(shape) == 4:
+            if wa and not seq_sharded and shape[1] % m == 0:
+                parts[1] = wa
+            if "model" in mesh.shape and shape[2] % ms == 0:
+                parts[2] = "model"
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    return tree_map_with_path(spec, caches)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """Map a PartitionSpec tree to NamedShardings on ``mesh``."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

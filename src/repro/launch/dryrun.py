@@ -27,6 +27,7 @@ from typing import Dict, Optional, Tuple
 
 import jax
 
+from repro import compat
 from repro.configs import (
     ARCH_IDS, SHAPES, config_for_shape, get_config, shape_applicable,
 )
@@ -153,7 +154,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, step: str,
                params=cfg.param_count(), params_active=cfg.param_count(True),
                model_flops=model_flops(cfg, shape))
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         lowered, compiled, t_lower, t_compile = lower_compile(cfg, shape, mesh, step)
         rec["lower_s"] = round(t_lower, 2)
         rec["compile_s"] = round(t_compile, 2)

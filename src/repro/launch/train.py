@@ -14,17 +14,18 @@ import time
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.checkpoint import save as ckpt_save
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ModelConfig
 from repro.core.distributed import make_distributed_ho_sgd
 from repro.core.ho_sgd import HOSGDConfig
 from repro.data import shard_batches, token_batches
-from repro.dist.sharding import batch_specs, param_specs, n_workers
+from repro.dist import CommLedger, get_compressor
+from repro.dist.sharding import named, param_specs, n_workers
 from repro.launch.mesh import make_test_mesh
-from repro.metrics import CSVLogger
+from repro.metrics import CSVLogger, comm_report
 from repro.models import transformer as T
 from repro.opt.optimizers import sgd, const_schedule
 
@@ -63,6 +64,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--log", default=None)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "qsgd", "signsgd", "topk"],
+                    help="codec on the FO gradient all-reduce")
     args = ap.parse_args(argv)
 
     n_dev = jax.device_count()
@@ -78,38 +82,51 @@ def main(argv=None):
 
     params = T.init_model(jax.random.key(args.seed), cfg)
     loss_fn = lambda p, b: T.loss_fn(cfg, p, b)
-    d = sum(int(x.size) for x in jax.tree.leaves(params))
+    leaf_dims = [int(x.size) for x in jax.tree.leaves(params)]
+    d = sum(leaf_dims)
     zo_lr = args.zo_lr if args.zo_lr is not None else args.lr * 50.0 / d
     ho = HOSGDConfig(tau=args.tau, mu=args.mu, m=m, lr=args.lr, zo_lr=zo_lr,
                      seed=args.seed)
     opt = sgd(const_schedule(args.lr))
+    codec = get_compressor(args.compress)
     fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,
-                                     params_like=params)
+                                     params_like=params, compressor=codec)
 
-    with jax.set_mesh(mesh):
-        ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
-                                       is_leaf=lambda x: isinstance(x, P))
-        params = jax.device_put(params, ns(param_specs(cfg, params, mesh)))
+    with compat.set_mesh(mesh):
+        params = jax.device_put(params, named(mesh, param_specs(cfg, params, mesh)))
         opt_state = opt.init(params)
-        fo_j, zo_j = jax.jit(fo), jax.jit(zo)
+        ledger = CommLedger()
+        fo_j = ledger.wrap("fo", jax.jit(fo))
+        zo_j = ledger.wrap("zo", jax.jit(zo))
 
         host = token_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
-        logger = CSVLogger(args.log, ["step", "order", "loss", "dt"])
+        logger = CSVLogger(args.log,
+                           ["step", "order", "loss", "dt", "comm_bytes"])
         t_prev = time.perf_counter()
         for t, batch in zip(range(args.steps), shard_batches(host, mesh)):
-            step = fo_j if t % args.tau == 0 else zo_j
+            is_fo = t % args.tau == 0
+            step = fo_j if is_fo else zo_j
+            t0 = time.perf_counter()
             params, opt_state, loss = step(jnp.int32(t), params, opt_state, batch)
+            loss = float(loss)                   # blocks: dispatch is async
+            dt_step = time.perf_counter() - t0
             if t % 10 == 0 or t == args.steps - 1:
                 now = time.perf_counter()
-                print(f"step {t:5d} ({'FO' if t % args.tau == 0 else 'ZO'}) "
-                      f"loss={float(loss):.4f} dt={now - t_prev:.2f}s")
+                print(f"step {t:5d} ({'FO' if is_fo else 'ZO'}) "
+                      f"loss={loss:.4f} dt={now - t_prev:.2f}s")
                 t_prev = now
-            logger.log(step=t, order=int(t % args.tau == 0), loss=float(loss),
-                       dt=time.perf_counter() - t_prev)
+            logger.log(step=t, order=int(is_fo), loss=loss, dt=dt_step,
+                       comm_bytes=ledger.bytes_per_step("fo" if is_fo else "zo"))
         if args.ckpt:
             path = ckpt_save(args.ckpt, args.steps, jax.device_get(params))
             print("checkpoint:", path)
         logger.close()
+    # dense FO exchange moves gradients in the param dtype (fp32 accumulator
+    # when grad_accum microbatches); ZO coefficients are always fp32
+    grad_bytes = 4 if cfg.grad_accum > 1 else jnp.dtype(cfg.dtype).itemsize
+    for line in comm_report(ledger, d=d, m=m, tau=args.tau, codec=codec,
+                            leaf_dims=leaf_dims, grad_bytes=grad_bytes):
+        print(line)
     print("done; final loss", float(loss))
     return float(loss)
 

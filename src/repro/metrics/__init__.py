@@ -1,1 +1,5 @@
-from repro.metrics.logging import CSVLogger, MeterRegistry  # noqa: F401
+from repro.metrics.logging import (  # noqa: F401
+    CSVLogger,
+    MeterRegistry,
+    comm_report,
+)

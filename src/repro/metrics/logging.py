@@ -56,3 +56,48 @@ class MeterRegistry:
             "gevals_per_worker": self.gevals,
             "wall_s": time.perf_counter() - self.t0,
         }
+
+
+def comm_report(ledger, d: int, m: int, tau: int,
+                scalar_bytes: int = 4, codec=None, leaf_dims=None,
+                grad_bytes: int = None) -> list:
+    """Measured-vs-analytic communication lines (paper Table 1, in bytes).
+
+    ``ledger`` is a repro.dist.CommLedger whose FO/ZO step programs were
+    wrapped under the names ``"fo"``/``"zo"``.  Analytic model per worker per
+    iteration (ledger convention: bytes *received*): FO moves the d-dim
+    gradient (d scalars), ZO gathers one scalar from each of the m workers
+    (m scalars); amortized over a period of tau that is (d + (tau-1)*m)/tau
+    scalars — Table 1's (tau-1+d)/tau up to the m-vs-1 receive convention.
+    Pass the active ``codec`` (repro.dist.Compressor) so the analytic FO
+    column uses its wire model instead of the dense scalar_bytes*d — and
+    ``leaf_dims`` (per-leaf parameter counts) with it, because the codec is
+    applied per leaf (one norm/scale header each), not to one flat vector.
+    The amortized line uses the ledger's *actual* FO/ZO step counts, so the
+    columns agree for any --steps, not just whole tau-periods.  ``grad_bytes``
+    is the dense FO exchange's per-scalar width — the gradient dtype's
+    itemsize (2 for bf16 archs) — while the ZO coefficients are always fp32,
+    so they keep ``scalar_bytes``.
+    """
+    fo_b = ledger.bytes_per_step("fo")
+    zo_b = ledger.bytes_per_step("zo")
+    n_fo = ledger.steps.get("fo", 0)
+    n_zo = ledger.steps.get("zo", 0)
+    iters = n_fo + n_zo
+    if codec is None:
+        fo_analytic = (grad_bytes or scalar_bytes) * d
+    else:
+        fo_analytic = sum(codec.nbytes(n) for n in (leaf_dims or [d]))
+    tag = f"[{codec.name}]" if codec is not None else ""
+    lines = [
+        "# communication (bytes/worker): measured (CommLedger) vs analytic",
+        f"comm/fo_bytes_per_step{tag},measured={fo_b},analytic={fo_analytic}",
+        f"comm/zo_bytes_per_step,measured={zo_b},analytic={scalar_bytes * m}",
+    ]
+    if iters:
+        measured = ledger.total_bytes() / iters
+        analytic = (n_fo * fo_analytic + n_zo * scalar_bytes * m) / iters
+        lines.append(
+            f"comm/amortized_bytes_per_iter,measured={measured:.1f},"
+            f"analytic={analytic:.1f},steps={iters}")
+    return lines

@@ -11,10 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs import get_config
 from repro.core.distributed import make_distributed_ho_sgd
 from repro.core.ho_sgd import HOSGDConfig, make_ho_sgd
-from repro.dist.sharding import batch_specs, param_specs
+from repro.dist.sharding import batch_specs, named, param_specs
 from repro.models import transformer as T
 from repro.opt.optimizers import const_schedule, sgd
 
@@ -36,12 +37,9 @@ def main():
     labels = np.concatenate([toks[:, 1:], -np.ones((8, 1), np.int32)], 1)
     batch = {"tokens": toks, "labels": labels}
 
-    with jax.set_mesh(mesh):
-        ns = lambda tree: jax.tree.map(
-            lambda s: NamedSharding(mesh, s), tree,
-            is_leaf=lambda x: isinstance(x, P))
-        params_d = jax.device_put(params, ns(param_specs(cfg, params, mesh)))
-        batch_d = jax.device_put(batch, ns(batch_specs(mesh, batch)))
+    with compat.set_mesh(mesh):
+        params_d = jax.device_put(params, named(mesh, param_specs(cfg, params, mesh)))
+        batch_d = jax.device_put(batch, named(mesh, batch_specs(mesh, batch)))
         opt_state = opt.init(params_d)
         fo_j, zo_j = jax.jit(fo), jax.jit(zo)
         p1, s1, l_fo = fo_j(jnp.int32(0), params_d, opt_state, batch_d)

@@ -1,0 +1,165 @@
+"""CommLedger semantics + codec round-trips + measured bytes on a 1x1 mesh.
+
+The 4-worker measured-vs-analytic check runs in a subprocess with its own
+XLA_FLAGS (tests/helpers/ledger_check.py via test_distributed.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distributed import make_distributed_ho_sgd
+from repro.core.ho_sgd import HOSGDConfig
+from repro.dist import CommLedger, collectives as coll
+from repro.dist.compress import compress_tree, get_compressor, qsgd, signsgd, topk
+from repro.launch.mesh import make_test_mesh
+from repro.opt.optimizers import const_schedule, sgd
+
+
+# --------------------------------------------------------------------------- #
+# ledger mechanics
+# --------------------------------------------------------------------------- #
+def test_ledger_books_per_step_and_excludes_diagnostics():
+    ledger = CommLedger()
+
+    def fake_step(x):
+        coll.note("all_gather", jnp.zeros((4,), jnp.float32), tag="coeffs")
+        coll.note("pmean", jnp.zeros((), jnp.float32), tag="loss",
+                  payload=False)
+        return x
+
+    step = ledger.wrap("zo", fake_step)
+    for _ in range(3):
+        step(1.0)
+    assert ledger.bytes_per_step("zo") == 16                 # 4 fp32, not loss
+    assert ledger.bytes_per_step("zo", payload_only=False) == 20
+    assert ledger.steps["zo"] == 3
+    assert ledger.total_bytes() == 48
+    assert ledger.by_kind("zo") == {"all_gather:coeffs": 16, "pmean:loss": 4}
+    ledger.reset()
+    assert ledger.total_bytes() == 0
+    assert ledger.bytes_per_step("zo") == 16                 # program survives
+
+
+def test_ledger_wrap_survives_jit_caching():
+    ledger = CommLedger()
+
+    @jax.jit
+    def traced(x):
+        coll.note("all_reduce", x, tag="grads")
+        return x + 1
+
+    step = ledger.wrap("fo", traced)
+    x = jnp.zeros((8,), jnp.float32)
+    step(x)
+    step(x)   # cache hit: no re-record, but the step still counts
+    assert ledger.bytes_per_step("fo") == 32
+    assert ledger.steps["fo"] == 2
+    assert ledger.total_bytes() == 64
+
+
+def test_collectives_record_nothing_outside_a_wrap():
+    out = coll.note("all_reduce", jnp.zeros((4,), jnp.float32))
+    assert out.shape == (4,)   # identity, no error, no global state
+
+
+# --------------------------------------------------------------------------- #
+# codecs
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("comp", [qsgd(4), qsgd(16), signsgd(), topk(0.1)])
+def test_codec_roundtrip_shape_and_wire_budget(comp):
+    g = jnp.asarray(np.random.default_rng(0).normal(size=(4096,)), jnp.float32)
+    dec = comp.decode(comp.encode(g, jax.random.key(0)))
+    assert dec.shape == g.shape and dec.dtype == jnp.float32
+    assert bool(jnp.all(jnp.isfinite(dec)))
+    assert comp.nbytes(g.size) < 4 * g.size   # beats the dense wire format
+
+
+def test_qsgd_quantization_is_unbiased():
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(512,)), jnp.float32)
+    comp = qsgd(4)
+    dec = jnp.stack([
+        comp.decode(comp.encode(g, jax.random.key(i))) for i in range(64)
+    ])
+    err = jnp.mean(dec, 0) - g
+    # stochastic rounding: the mean over keys converges on g
+    assert float(jnp.max(jnp.abs(err))) < 0.2 * float(jnp.linalg.norm(g)) / 4
+
+
+def test_signsgd_keeps_signs_topk_keeps_largest():
+    g = jnp.asarray([3.0, -2.0, 0.5, -0.1])
+    s_dec = signsgd().decode(signsgd().encode(g, jax.random.key(0)))
+    assert bool(jnp.all(jnp.sign(s_dec) == jnp.sign(g)))
+    t = topk(k=2)
+    t_dec = t.decode(t.encode(g, jax.random.key(0)))
+    np.testing.assert_allclose(np.asarray(t_dec), [3.0, -2.0, 0.0, 0.0])
+
+
+def test_compress_tree_preserves_structure_and_books_bytes():
+    tree = {"a": jnp.ones((64, 8), jnp.float32), "b": jnp.ones((100,), jnp.float32)}
+    out, nbytes = compress_tree(signsgd(), tree, jax.random.key(0))
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert out["a"].shape == (64, 8)
+    assert nbytes == (4 + 512 // 8) + (4 + (100 + 7) // 8)
+
+
+def test_get_compressor_registry():
+    assert get_compressor("none") is None and get_compressor(None) is None
+    assert get_compressor("qsgd").name == "qsgd4"
+    with pytest.raises(ValueError):
+        get_compressor("zip")
+
+
+# --------------------------------------------------------------------------- #
+# measured bytes through the real distributed steps (degenerate 1x1 mesh)
+# --------------------------------------------------------------------------- #
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def _run_steps(compressor=None):
+    mesh = make_test_mesh(data=1, model=1)
+    d = 64
+    ho = HOSGDConfig(tau=4, mu=1e-3, m=1, lr=0.05, zo_lr=0.05 / d)
+    opt = sgd(const_schedule(ho.lr))
+    fo, zo = make_distributed_ho_sgd(quad_loss, mesh, ho, opt,
+                                     compressor=compressor)
+    ledger = CommLedger()
+    fo_j = ledger.wrap("fo", jax.jit(fo))
+    zo_j = ledger.wrap("zo", jax.jit(zo))
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    state = opt.init(params)
+    batch = {"t": jnp.ones((4, d), jnp.float32)}
+    params, state, _ = fo_j(jnp.int32(0), params, state, batch)
+    params, state, _ = zo_j(jnp.int32(1), params, state, batch)
+    return ledger, d
+
+
+def test_measured_bytes_match_table1_on_degenerate_mesh():
+    ledger, d = _run_steps()
+    assert ledger.bytes_per_step("fo") == 4 * d     # the gradient all-reduce
+    assert ledger.bytes_per_step("zo") == 4 * 1     # m scalars, m=1 — not d!
+
+
+def test_fsdp_zo_single_books_its_one_scalar():
+    """The fsdp (m=1) ZO path books 4 bytes — measured, not a silent 0."""
+    from repro.core.distributed import make_zo_step
+    mesh = make_test_mesh(data=1, model=1)
+    d = 64
+    ho = HOSGDConfig(tau=4, mu=1e-3, m=1, lr=0.05, zo_lr=0.05 / d)
+    opt = sgd(const_schedule(ho.lr))
+    zo = make_zo_step(quad_loss, mesh, ho, opt, fsdp=True)
+    ledger = CommLedger()
+    zo_j = ledger.wrap("zo", jax.jit(zo))
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    zo_j(jnp.int32(1), params, opt.init(params),
+         {"t": jnp.ones((4, d), jnp.float32)})
+    assert ledger.bytes_per_step("zo") == 4
+
+
+def test_qsgd_fo_step_records_fewer_bytes_than_dense():
+    dense, d = _run_steps()
+    compressed, _ = _run_steps(get_compressor("qsgd"))
+    assert compressed.bytes_per_step("fo") < dense.bytes_per_step("fo") == 4 * d
+    # zo traffic is untouched by the codec
+    assert compressed.bytes_per_step("zo") == dense.bytes_per_step("zo")

@@ -21,9 +21,14 @@ def _run(script_args, timeout=900, env_extra=None):
     )
 
 
-def test_main_process_single_device():
-    # the repo contract: only the dry-run forces a large device count
-    assert jax.device_count() == 1
+def test_main_process_device_count_matches_contract():
+    # the repo contract: the main process only has multiple devices when the
+    # environment forces them (CI runs tier-1 with an 8-device XLA flag so
+    # mesh-path tests see a real mesh); otherwise it stays single-device
+    import re
+    m = re.search(r"host_platform_device_count=(\d+)",
+                  os.environ.get("XLA_FLAGS", ""))
+    assert jax.device_count() == (int(m.group(1)) if m else 1)
 
 
 @pytest.mark.slow
@@ -31,6 +36,15 @@ def test_distributed_matches_reference():
     r = _run([os.path.join(HERE, "helpers", "dist_check.py")])
     assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
     assert "DIST_CHECK_OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_comm_ledger_on_four_worker_mesh():
+    """Table 1, measured: ZO books exactly 4*m bytes on a real 4-worker mesh,
+    dense FO books 4*d, QSGD-compressed FO strictly less (ISSUE 1 criteria)."""
+    r = _run([os.path.join(HERE, "helpers", "ledger_check.py")])
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
+    assert "LEDGER_CHECK_OK" in r.stdout
 
 
 @pytest.mark.slow

@@ -78,6 +78,34 @@ def test_cost_model_table1():
     assert zo.comm_scalars(d) == 1.0 and zo.fevals(d) == 2.0
 
 
+def test_adaptive_tau_counter_lives_in_state():
+    """The since-FO counter is method *state*: re-initialization restarts the
+    schedule, and two interleaved runs can't contaminate each other (the old
+    mutable-closure counter leaked across run_method calls)."""
+    from repro.core.ho_sgd import make_adaptive_ho_sgd
+    meth = make_adaptive_ho_sgd(
+        quad_loss, HOSGDConfig(tau=8, m=4, lr=0.05, zo_lr=0.05 / D_),
+        tau_schedule=lambda t: 3)
+    m, B = 4, 4
+
+    def orders(state, ts):
+        params, out = P0, []
+        for t in ts:
+            batch = next(quad_batches(m, B, D_, seed=t))
+            params, state, metrics = meth.step(t, params, state, batch)
+            out.append(int(metrics["order"]))
+        return state, out
+
+    # two independent states stepped in lockstep see identical schedules
+    sa, sb = meth.init(P0), meth.init(P0)
+    sa, oa = orders(sa, range(7))
+    sb, ob = orders(sb, range(7))
+    assert oa == ob == [1, 0, 0, 1, 0, 0, 1]
+    # a run that stopped mid-period doesn't leak its position into a fresh init
+    _, o_fresh = orders(meth.init(P0), range(7))
+    assert o_fresh == oa
+
+
 def test_zo_step_uses_two_fevals_per_worker():
     """Count actual loss_fn invocations in a traced ZO step."""
     calls = {"n": 0}

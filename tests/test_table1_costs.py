@@ -1,0 +1,85 @@
+"""Table 1 cost model: per-iteration orders for every method, and agreement
+between the analytic formulas and the CommLedger's measured bytes."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core import make_ho_sgd, make_pa_sgd, make_sync_sgd, make_zo_sgd
+from repro.core.ho_sgd import HOSGDConfig
+from repro.metrics import comm_report
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+D, M, TAU = 10_000, 4, 8
+
+
+def test_ho_sgd_per_iteration_orders():
+    meth = make_ho_sgd(quad_loss, HOSGDConfig(tau=TAU, m=M, lr=0.1))
+    assert meth.comm_scalars(D) == pytest.approx((TAU - 1 + D) / TAU)
+    assert meth.fevals(D) == pytest.approx(2 * (TAU - 1) / TAU)
+    assert meth.gevals(D) == pytest.approx(1 / TAU)
+
+
+def test_sync_sgd_per_iteration_orders():
+    meth = make_sync_sgd(quad_loss, M, lr=0.1)
+    assert meth.comm_scalars(D) == D      # the full gradient, every iteration
+    assert meth.fevals(D) == 0.0
+    assert meth.gevals(D) == 1.0
+
+
+def test_zo_sgd_per_iteration_orders():
+    meth = make_zo_sgd(quad_loss, M, mu=1e-3, lr=0.1)
+    assert meth.comm_scalars(D) == 1.0    # one scalar — independent of d
+    assert meth.fevals(D) == 2.0
+    assert meth.gevals(D) == 0.0
+
+
+def test_pa_sgd_per_iteration_orders():
+    meth = make_pa_sgd(quad_loss, M, tau=TAU, lr=0.1)
+    assert meth.comm_scalars(D) == pytest.approx(D / TAU)   # model averaging
+    assert meth.fevals(D) == 0.0
+    assert meth.gevals(D) == 1.0          # full local gradient every iteration
+
+
+def test_spectrum_ordering_in_d():
+    """HO-SGD sits between sync-SGD (d) and ZO-SGD (O(1)) for large d."""
+    ho = make_ho_sgd(quad_loss, HOSGDConfig(tau=TAU, m=M, lr=0.1))
+    sync = make_sync_sgd(quad_loss, M, lr=0.1)
+    zo = make_zo_sgd(quad_loss, M, mu=1e-3, lr=0.1)
+    assert zo.comm_scalars(D) < ho.comm_scalars(D) < sync.comm_scalars(D)
+    assert ho.comm_scalars(D) == pytest.approx(sync.comm_scalars(D) / TAU,
+                                               rel=1e-2)
+
+
+def test_ledger_agrees_with_analytic_formulas():
+    """Drive the real distributed steps; comm_report's measured == analytic."""
+    import jax
+    from repro.core.distributed import make_distributed_ho_sgd
+    from repro.dist import CommLedger
+    from repro.launch.mesh import make_test_mesh
+    from repro.opt.optimizers import const_schedule, sgd
+
+    mesh = make_test_mesh(data=1, model=1)
+    d, m, tau = 64, 1, 4
+    ho = HOSGDConfig(tau=tau, mu=1e-3, m=m, lr=0.05, zo_lr=0.05 / d)
+    opt = sgd(const_schedule(ho.lr))
+    fo, zo = make_distributed_ho_sgd(quad_loss, mesh, ho, opt)
+    ledger = CommLedger()
+    fo_j, zo_j = ledger.wrap("fo", jax.jit(fo)), ledger.wrap("zo", jax.jit(zo))
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    state = opt.init(params)
+    batch = {"t": jnp.ones((4, d), jnp.float32)}
+    for t in range(2 * tau):
+        step = fo_j if t % tau == 0 else zo_j
+        params, state, _ = step(jnp.int32(t), params, state, batch)
+
+    assert ledger.bytes_per_step("fo") == 4 * d
+    assert ledger.bytes_per_step("zo") == 4 * m
+    measured = ledger.total_bytes() / (2 * tau)
+    analytic = 4 * (d + (tau - 1) * m) / tau
+    assert measured == pytest.approx(analytic)
+    lines = comm_report(ledger, d=d, m=m, tau=tau)
+    assert any("fo_bytes_per_step,measured=256,analytic=256" in l
+               for l in lines)
