@@ -7,6 +7,7 @@ path; see kernels/*.py docstrings and EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -24,7 +25,74 @@ def timeit(fn, *args, reps=3):
     return 1e6 * (time.perf_counter() - t0) / reps
 
 
-def main():
+def engine_compare(smoke: bool = False):
+    """End-to-end ZO step per DirectionEngine backend: step time + the
+    direction-algebra HBM-bytes model.
+
+    The bytes column counts only traffic for handling the direction vector
+    (the loss evaluations are identical across backends), fp32, d params,
+    m workers, per ZO step:
+
+    * tree   — v materialized per use: perturb m*(v write + v read + x
+               read + x~ write) = 16*d*m; reconstruct m*(v write + v read +
+               acc read + acc write) = 16*d*m.
+    * fused  — generation fused into the consuming op (no v buffer):
+               perturb m*(x read + x~ write) = 8*d*m; reconstruct
+               acc kept live through the worker loop = 8*d*m.
+    * pallas — perturb m*(x read + x~ write) = 8*d*m; reconstruct all m
+               workers in one pass = one 4*d write (acc in registers).
+
+    On this CPU container interpret-mode timing measures dispatch, not TPU
+    performance — the bytes model is the roofline-relevant number; the
+    timings only sanity-check that every backend drives the identical
+    optimizer step.
+    """
+    from repro.core.ho_sgd import HOSGDConfig, make_ho_sgd
+
+    d_leaf = (1 << 12) + 321 if smoke else (1 << 18) + 321  # odd: tail blocks
+    m, B = 4, 8
+    params = {"w": jax.random.normal(jax.random.key(1), (d_leaf,)),
+              "b": jax.random.normal(jax.random.key(2), (257,))}
+    d = d_leaf + 257
+
+    def loss_fn(p, b):
+        return 0.5 * jnp.mean(jnp.sum((p["w"][None, :] - b["t"]) ** 2, -1)) \
+            + 0.5 * jnp.sum(p["b"] ** 2)
+
+    batch = {"t": jax.random.normal(jax.random.key(3), (m * B, d_leaf))}
+    bytes_model = {
+        "tree": 32 * d * m,
+        "fused": 16 * d * m,
+        "pallas": 8 * d * m + 4 * d,
+    }
+    print("engine,us_per_zo_step,direction_bytes_model,loss")
+    for name in ("tree", "fused", "pallas"):
+        cfg = HOSGDConfig(tau=1 << 30, mu=1e-3, m=m, lr=0.05, zo_lr=0.05 / d,
+                          engine=name)
+        meth = make_ho_sgd(loss_fn, cfg)
+        state = meth.init(params)
+
+        def one_step(p, s):
+            p, s, metrics = meth.step(1, p, s, batch)
+            return p, s, metrics["loss"]
+
+        p1, s1, loss = one_step(params, state)          # compile + warm
+        t0 = time.perf_counter()
+        reps = 2 if smoke else 5
+        for _ in range(reps):
+            _, _, l = one_step(params, state)
+        jax.block_until_ready(l)
+        us = 1e6 * (time.perf_counter() - t0) / reps
+        print(f"engine/{name},{us:.0f},{bytes_model[name]},{float(loss):.6f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes / few reps (CI tier-2)")
+    args = ap.parse_args(argv)
+    smoke = args.smoke
+
     key = jax.random.key(0)
     print("name,us_per_call,hbm_bytes_kernel,hbm_bytes_jnp")
 
@@ -34,8 +102,8 @@ def main():
     nb = x.size * 4 * 2
     print(f"kern/rmsnorm,{timeit(lambda a, b: ops.rmsnorm(a, b), x, s):.0f},{nb},{nb}")
 
-    # flash attention S=512: kernel never materializes (S,S) probs
-    B, S, H, hd = 1, 512, 4, 64
+    # flash attention: kernel never materializes (S,S) probs
+    B, S, H, hd = 1, (128 if smoke else 512), 4, 64
     q = jax.random.normal(key, (B, S, H, hd))
     k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, hd))
     v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, hd))
@@ -47,7 +115,7 @@ def main():
 
     # selective scan: kernel keeps (di, n) state in VMEM; jnp materializes
     # (B, S, di, n) twice (deltaA, deltaBu) plus the scanned h
-    B, S, di, n = 2, 256, 256, 16
+    B, S, di, n = 2, (64 if smoke else 256), (64 if smoke else 256), 16
     u = jax.random.normal(key, (B, S, di)) * 0.3
     dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 3), (B, S, di))) * 0.1
     Bm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, n))
@@ -61,8 +129,9 @@ def main():
     print(f"kern/selective_scan,{t:.0f},{io},{io + state4d}")
 
     # zo perturb: kernel = 1 read + 1 write of x (direction never in HBM);
-    # jnp path additionally writes+reads the direction
-    npar = 1 << 20
+    # jnp path additionally writes+reads the direction.  Odd size: the tail
+    # block exercises the masked-boundary path.
+    npar = (1 << 14) + 321 if smoke else (1 << 20) + 321
     xx = jax.random.normal(key, (npar,))
     t = timeit(lambda a: ops.zo_perturb(a, 55, 0.01, 0, block=8192), xx)
     print(f"kern/zo_perturb,{t:.0f},{npar * 4 * 2},{npar * 4 * 4}")
@@ -74,6 +143,8 @@ def main():
     t = timeit(lambda s_, c_: ops.zo_reconstruct(npar, s_, c_, 0, block=8192),
                salts, coeffs)
     print(f"kern/zo_reconstruct,{t:.0f},{npar * 4},{npar * 4 * 2 * m}")
+
+    engine_compare(smoke)
 
 
 if __name__ == "__main__":

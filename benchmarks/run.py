@@ -58,7 +58,8 @@ def main(argv=None):
                 fig2_classification.main(argv2)
             elif sec == "kernels":
                 from benchmarks import kernels_bench
-                kernels_bench.main()
+                # explicit argv: never let the section parse run.py's own flags
+                kernels_bench.main(["--smoke"] if args.quick else [])
             elif sec == "tau":
                 from benchmarks import tau_ablation
                 tau_ablation.main(

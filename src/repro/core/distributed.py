@@ -13,6 +13,7 @@ Workers = (pod, data) slices; tensor parallelism on the auto ``model`` axis.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
-from repro.core import directions as D
+from repro.core.engine import make_engine
 from repro.core.ho_sgd import HOSGDConfig
 from repro.dist import collectives as coll
 from repro.dist.compress import Compressor, compress_tree
@@ -105,6 +106,7 @@ def make_zo_step(
     m: Optional[int] = None,
     fsdp: bool = False,
     param_specs_tree: Any = None,
+    vmap_workers: bool = False,
 ) -> Callable:
     """(t, params, opt_state, batch) -> (params, opt_state, loss).
 
@@ -112,6 +114,19 @@ def make_zo_step(
     (replicated across workers — every worker computes the same sum); the
     optimizer update composes outside, so HO-SGD's ZO steps can drive any
     optimizer (beyond-paper: ZO-Adam).
+
+    The direction algebra itself lives in ``repro.core.engine`` — the
+    backend is picked by ``ho.engine`` ('fused' keeps the direction out of
+    program buffers; 'pallas' routes through the kernels; 'tree' is the
+    reference) and the params' sharding specs are threaded into the engine
+    so every hash-generated leaf and accumulator carries a sharding
+    constraint (without one the partitioner is free to replicate the full
+    d-dim direction per device — 1.8 TB fp32 for arctic).
+
+    ``vmap_workers`` makes the 0.4.x auto-sharded fallback evaluate the m
+    worker coefficients (and the reconstruction) under one vmap, keeping
+    its HLO O(1) in m — the large-m CPU-rehearsal mode; the default stays
+    unrolled, which is bit-compatible with the single-host reference.
 
     With ``fsdp`` params are sharded over the data axis, so a model replica
     (= the paper's "worker") spans (data, model) and the ZO step runs with
@@ -125,102 +140,28 @@ def make_zo_step(
         wa = ()
     else:
         wa = worker_axes(mesh)
-    m = m or max(1, int(jnp.prod(jnp.asarray([mesh.shape[a] for a in wa] or [1]))))
+    # host-side mesh arithmetic: plain ints, never jax arrays
+    m = m or max(1, math.prod(mesh.shape[a] for a in wa))
 
-    def constrain(tree):
-        """Pin hash-generated direction trees to the params' sharding.
+    def engine_for(params):
+        return make_engine(ho.engine, params, ho.seed,
+                           specs=param_specs_tree, acc_dtype=ho.acc_dtype)
 
-        The directions are pure functions of iota — without a constraint the
-        partitioner is free to replicate them, which materializes the full
-        d-dim vector per device (1.8 TB fp32 for arctic).  Param specs only
-        name auto axes ('model', and 'data' under fsdp where the manual axis
-        is 'pod'), so the same specs apply inside the shard_map body."""
-        if param_specs_tree is None:
-            return tree
-        return jax.tree.map(
-            lambda x, s: jax.lax.with_sharding_constraint(x, s),
-            tree, param_specs_tree)
-
-    # --- fused direction algebra -------------------------------------------
-    # The direction vector v is NEVER materialized as a tree: every use
-    # regenerates the hashed gaussian per leaf and fuses it into the consuming
-    # op (sum-of-squares reduce / perturb add / reconstruction accumulate).
-    # This is the XLA-level analogue of the kernels/zo_direction.py Pallas
-    # kernels (on a real TPU those run the same algebra from VMEM) and is
-    # what keeps the ZO step's memory at O(params), not O(m * params).
-    def _gauss_leaf(x, spec, li, t, worker):
-        g = D.gaussian_from_salt(x.shape, D.fold(ho.seed, t, worker, li))
-        if spec is not None:
-            g = jax.lax.with_sharding_constraint(g, spec)
-        return g
-
-    def _spec_leaves(params):
-        if param_specs_tree is None:
-            return [None] * len(jax.tree.leaves(params))
-        return jax.tree.leaves(
-            param_specs_tree, is_leaf=lambda x: isinstance(x, P))
-
-    def _inv_norm(leaves, specs, t, worker):
-        ssq = sum(
-            jnp.sum(jnp.square(_gauss_leaf(x, s, i, t, worker)))
-            for i, (x, s) in enumerate(zip(leaves, specs))
-        )
-        return jax.lax.rsqrt(ssq + 1e-30)
-
-    def _perturbed(leaves, treedef, specs, t, worker, scale):
-        out = [
-            (x.astype(jnp.float32) + scale * _gauss_leaf(x, s, i, t, worker)
-             ).astype(x.dtype)
-            for i, (x, s) in enumerate(zip(leaves, specs))
-        ]
-        return jax.tree.unflatten(treedef, out)
-
-    def _zo_coeff(t, params, batch_local, worker):
-        """Two function evaluations -> the scalar coefficient c (eq. 4)."""
-        leaves, treedef = jax.tree.flatten(params)
-        specs = _spec_leaves(params)
-        dim = D.tree_dim(params)
-        inv = _inv_norm(leaves, specs, t, worker)
-        f0 = loss_fn(params, batch_local)
-        f1 = loss_fn(
-            _perturbed(leaves, treedef, specs, t, worker, jnp.float32(ho.mu) * inv),
-            batch_local)
-        return ((dim / ho.mu) * (f1 - f0)).astype(jnp.float32), f0
-
-    def _reconstruct(t, params, cs):
-        """(zo_scale/m) * sum_i c_i * v_i, one live accumulator tree."""
-        leaves, treedef = jax.tree.flatten(params)
-        specs = _spec_leaves(params)
-        adt = jnp.dtype(ho.acc_dtype)
-        acc0 = [
-            jnp.zeros(x.shape, adt) if s is None
-            else jax.lax.with_sharding_constraint(jnp.zeros(x.shape, adt), s)
-            for x, s in zip(leaves, specs)
-        ]
-
-        def recon(i, acc):
-            w = i.astype(jnp.uint32)
-            inv = _inv_norm(leaves, specs, t, w)
-            coeff = cs[i] * inv
-            return [
-                (a.astype(jnp.float32)
-                 + coeff * _gauss_leaf(x, s, li, t, w)).astype(adt)
-                for li, (a, x, s) in enumerate(zip(acc, leaves, specs))
-            ]
-
-        acc = jax.lax.fori_loop(0, m, recon, acc0)
-        g = [a.astype(jnp.float32) * (ho.zo_scale / m) for a in acc]
-        return jax.tree.unflatten(treedef, g)
+    def _scaled(eng, cs, t, vmap_w=False):
+        rec = eng.reconstruct(cs, t, vmap_workers=vmap_w)
+        return jax.tree.map(lambda a: a * (ho.zo_scale / m), rec)
 
     def zo_inner(t, params, batch_local):
+        eng = engine_for(params)
         # worker id from the manual axes
         idx = jax.lax.axis_index(wa[0])
         if len(wa) == 2:
             idx = idx * mesh.shape[wa[1]] + jax.lax.axis_index(wa[1])
-        c, f0 = _zo_coeff(t, params, batch_local, idx.astype(jnp.uint32))
+        c, f0 = eng.zo_coeff(loss_fn, params, batch_local, t,
+                             idx.astype(jnp.uint32), ho.mu)
         cs = coll.all_gather(c, wa, tag="zo_coeffs")      # (m,) scalars — the
         cs = cs.reshape(-1)                               # paper's entire comm
-        g_hat = _reconstruct(t, params, cs)
+        g_hat = _scaled(eng, cs, t)
         # averaging the monitoring loss is diagnostics, not Algorithm 1's
         # communication — booked as non-payload so measured bytes stay 4*m
         loss = coll.pmean(f0, wa, tag="loss", payload=False)
@@ -234,9 +175,10 @@ def make_zo_step(
         fsdp arch's ZO step runs; the gap vs. the mesh's nominal worker
         count is the documented fsdp limitation, and it should be visible.
         """
-        c, f0 = _zo_coeff(t, params, batch, jnp.uint32(0))
+        eng = engine_for(params)
+        c, f0 = eng.zo_coeff(loss_fn, params, batch, t, jnp.uint32(0), ho.mu)
         cs = coll.note("all_gather", c.reshape(1), tag="zo_coeffs")
-        g_hat = _reconstruct(t, params, cs)
+        g_hat = _scaled(eng, cs, t)
         return g_hat, f0
 
     def zo_auto(t, params, batch):
@@ -244,27 +186,26 @@ def make_zo_step(
 
         jax 0.4.x's partitioner aborts on collectives inside a partial-auto
         shard_map (see repro.compat), so on old runtimes the m worker
-        evaluations are unrolled in-program over the workers' batch slices
-        and the coefficient exchange is left to GSPMD.  Same math, same
-        directions, same (booked) communication — the m evals serialize in
-        the program instead of running one-per-worker, a documented cost of
-        the fallback, not of the method.
+        evaluations run in-program over the workers' batch slices and the
+        coefficient exchange is left to GSPMD.  Same math, same directions,
+        same (booked) communication — the m evals serialize in the program
+        instead of running one-per-worker, a documented cost of the
+        fallback, not of the method.  ``vmap_workers`` batches those m
+        evaluations (and the reconstruction) under one vmap so the lowered
+        HLO stays O(1) in m.
         """
         for x in jax.tree.leaves(batch):
             assert x.shape[0] % m == 0, \
                 f"batch {x.shape} not divisible by m={m} workers"
-        cs, f0_sum = [], jnp.float32(0.0)
-        for i in range(m):  # static unroll: workers are a mesh property
-            b_i = jax.tree.map(
-                lambda x: jax.lax.slice_in_dim(
-                    x, i * (x.shape[0] // m), (i + 1) * (x.shape[0] // m)),
-                batch)
-            c, f0 = _zo_coeff(t, params, b_i, jnp.uint32(i))
-            cs.append(c)
-            f0_sum = f0_sum + f0
-        cs = coll.note("all_gather", jnp.stack(cs), tag="zo_coeffs")
-        g_hat = _reconstruct(t, params, cs)
-        loss = coll.note("pmean", f0_sum / m, tag="loss", payload=False)
+        eng = engine_for(params)
+        workers = jnp.arange(m, dtype=jnp.uint32)
+        stacked = jax.tree.map(
+            lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+        cs, f0s = eng.zo_coeffs(loss_fn, params, stacked, t, workers, ho.mu,
+                                vmap_workers=vmap_workers)
+        cs = coll.note("all_gather", cs, tag="zo_coeffs")
+        g_hat = _scaled(eng, cs, t, vmap_w=vmap_workers)
+        loss = coll.note("pmean", jnp.mean(f0s), tag="loss", payload=False)
         return g_hat, loss
 
     def zo_step(t, params, opt_state, batch):
@@ -298,6 +239,7 @@ def make_distributed_ho_sgd(
     model_cfg=None,
     params_like: Any = None,
     compressor: Optional[Compressor] = None,
+    vmap_workers: bool = False,
 ):
     """Returns (fo_step, zo_step) honoring the arch's production knobs.
 
@@ -313,7 +255,8 @@ def make_distributed_ho_sgd(
         specs = param_specs(model_cfg, params_like, mesh)
     fo = make_fo_step(loss_fn, mesh, opt, grad_accum=ga, scan_unroll=su,
                       compressor=compressor, seed=ho.seed)
-    zo = make_zo_step(loss_fn, mesh, ho, opt, fsdp=fsdp, param_specs_tree=specs)
+    zo = make_zo_step(loss_fn, mesh, ho, opt, fsdp=fsdp, param_specs_tree=specs,
+                      vmap_workers=vmap_workers)
     return fo, zo
 
 

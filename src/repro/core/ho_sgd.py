@@ -20,8 +20,7 @@ from typing import Any, Callable, Dict, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import directions as D
-from repro.core.zo_grad import zo_coefficient
+from repro.core.engine import make_engine
 from repro.opt.optimizers import Optimizer, apply_deltas, const_schedule, sgd
 
 
@@ -39,6 +38,11 @@ class HOSGDConfig:
     # faithful default; bf16 halves the largest ZO-step resident (the
     # estimate is O(d)-noisy anyway) — beyond-paper memory lever (§Perf).
     acc_dtype: str = "float32"
+    # DirectionEngine backend for the ZO direction algebra ('tree' | 'fused'
+    # | 'pallas'; see repro.core.engine).  All backends are numerically
+    # equivalent; 'fused' keeps the direction out of program buffers and its
+    # HLO O(1) in m, 'pallas' additionally keeps it out of HBM on TPU.
+    engine: str = "fused"
 
     @property
     def zo_scale(self) -> float:
@@ -87,22 +91,13 @@ def make_ho_sgd(
     @jax.jit
     def zo_step(t, params, opt_state, batch):
         """Eq. (4)-(6): per-worker scalar coefficients, shared reconstruction."""
-        dim = D.tree_dim(params)
-        adt = jnp.dtype(cfg.acc_dtype)   # same accumulator knob as distributed
-        acc = jax.tree.map(lambda p: jnp.zeros(p.shape, adt), params)
-        loss_acc = jnp.float32(0.0)
-        for i in range(cfg.m):  # static unroll: workers are a mesh property
-            batch_i = jax.tree.map(lambda x: x[i], batch)
-            v = D.sphere_direction(params, cfg.seed, t, jnp.uint32(i))
-            c, f0 = zo_coefficient(loss_fn, params, batch_i, v, cfg.mu, dim)
-            acc = jax.tree.map(
-                lambda a, x: (a.astype(jnp.float32)
-                              + c * x.astype(jnp.float32)).astype(adt), acc, v)
-            loss_acc = loss_acc + f0
+        eng = make_engine(cfg.engine, params, cfg.seed, acc_dtype=cfg.acc_dtype)
+        workers = jnp.arange(cfg.m, dtype=jnp.uint32)
+        cs, f0s = eng.zo_coeffs(loss_fn, params, batch, t, workers, cfg.mu)
         g_hat = jax.tree.map(
-            lambda a: a.astype(jnp.float32) * (cfg.zo_scale / cfg.m), acc)
+            lambda a: a * (cfg.zo_scale / cfg.m), eng.reconstruct(cs, t))
         deltas, opt_state = opt.update(g_hat, opt_state, params, t)
-        return apply_deltas(params, deltas), opt_state, loss_acc / cfg.m
+        return apply_deltas(params, deltas), opt_state, jnp.mean(f0s)
 
     def init(params):
         return opt.init(params)

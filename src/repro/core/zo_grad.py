@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import directions as D
+from repro.core.engine import make_engine
 
 
 def zo_coefficient(
@@ -39,28 +40,29 @@ def zo_gradient(
     t,
     worker,
     mu: float,
+    engine: str = "tree",
 ) -> Tuple[Any, jax.Array, jax.Array]:
     """Full single-worker ZO gradient estimate (c * v), plus (c, f0)."""
-    dim = D.tree_dim(params)
-    v = D.sphere_direction(params, seed, t, worker)
-    c, f0 = zo_coefficient(loss_fn, params, batch, v, mu, dim)
-    g = jax.tree.map(lambda x: c * x.astype(jnp.float32), v)
+    eng = make_engine(engine, params, seed)
+    worker = jnp.asarray(worker, jnp.uint32)
+    c, f0 = eng.zo_coeff(loss_fn, params, batch, t, worker, mu)
+    g = eng.reconstruct(c.reshape(1), t, workers=worker.reshape(1))
     return g, c, f0
 
 
-def reconstruct_update(params: Any, coeffs: jax.Array, seed: int, t) -> Any:
+def reconstruct_update(params: Any, coeffs: jax.Array, seed: int, t,
+                       engine: str = "tree", vmap_workers: bool = False) -> Any:
     """(1/m) * sum_i c_i * v_{t,i} regenerated locally from the scalars.
 
     ``coeffs`` is the all-gathered (m,) vector of scalar coefficients.  The
-    loop is unrolled (m is a static mesh property) so the lowered HLO has no
-    extra while-loop — keeps the roofline scan-correction simple.
+    ``tree`` backend unrolls the worker loop (m is a static mesh property)
+    so the lowered HLO has no extra while-loop — keeps the roofline
+    scan-correction simple; ``vmap_workers`` generates the m directions
+    under one vmap instead (HLO O(1) in m for large-m CPU rehearsals).
     """
-    m = coeffs.shape[0]
-    acc = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
-    for i in range(m):
-        v = D.sphere_direction(params, seed, t, jnp.uint32(i))
-        acc = jax.tree.map(lambda a, x: a + coeffs[i] * x.astype(jnp.float32), acc, v)
-    return jax.tree.map(lambda a: a / m, acc)
+    eng = make_engine(engine, params, seed)
+    rec = eng.reconstruct(coeffs, t, vmap_workers=vmap_workers)
+    return jax.tree.map(lambda a: a / coeffs.shape[0], rec)
 
 
 def smoothed_loss(loss_fn: Callable, params: Any, batch: Any, mu: float,

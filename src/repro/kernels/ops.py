@@ -77,6 +77,9 @@ def zo_perturb(x, salt, scale, offset=0, block: int = 4096):
     return zo_k.zo_perturb(x, salt, scale, offset, block=block, interpret=INTERPRET)
 
 
-@partial(jax.jit, static_argnames=("n", "block"))
-def zo_reconstruct(n: int, salts, coeffs, offset=0, block: int = 4096):
-    return zo_k.zo_reconstruct(n, salts, coeffs, offset, block=block, interpret=INTERPRET)
+@partial(jax.jit, static_argnames=("n", "block", "acc_dtype"))
+def zo_reconstruct(n: int, salts, coeffs, offset=0, block: int = 4096,
+                   acc_dtype="float32"):
+    return zo_k.zo_reconstruct(n, salts, coeffs, offset, block=block,
+                               acc_dtype=jnp.dtype(acc_dtype),
+                               interpret=INTERPRET)

@@ -73,9 +73,13 @@ def ref_zo_perturb(x: jax.Array, salt, scale, offset=0) -> jax.Array:
     return (x.astype(jnp.float32) + jnp.float32(scale) * g).astype(x.dtype)
 
 
-def ref_zo_reconstruct(n: int, salts, coeffs, offset=0) -> jax.Array:
+def ref_zo_reconstruct(n: int, salts, coeffs, offset=0,
+                       acc_dtype=jnp.float32) -> jax.Array:
+    """``acc_dtype`` rounds the accumulator after each worker, mirroring the
+    kernel's (and the DirectionEngine accumulators') per-worker semantics."""
+    adt = jnp.dtype(acc_dtype)
     acc = jnp.zeros((n,), jnp.float32)
     for w in range(salts.shape[0]):
         g = gaussian_from_salt((n,), jnp.asarray(salts[w], jnp.uint32), offset)
-        acc = acc + coeffs[w] * g
+        acc = (acc + coeffs[w] * g).astype(adt).astype(jnp.float32)
     return acc

@@ -13,8 +13,18 @@ so the direction never exists in HBM:
                        single pass over the parameters (m gaussians per
                        element generated in registers).
 
-``offset`` is each leaf's base index in the flat d-dim parameter vector, so
-block-local counters agree with the whole-tree hash used by the optimizer.
+``offset`` shifts the leaf-local hash counter: the optimizer hashes each
+leaf with its own salt and counters starting at 0, the grid shifts each
+block by ``i * block`` internally, and callers that split one leaf across
+multiple kernel calls pass the chunk's start index (whole-leaf calls pass
+0 — see tests/test_directions.py::test_offset_split_consistency).
+
+Arbitrary leaf sizes are supported: the grid is ``ceil(n / block)`` and the
+tail block is masked.  Reductions (``zo_sumsq``) mask explicitly in-kernel —
+hash values exist for any counter, so out-of-range lanes would otherwise
+contribute garbage; elementwise outputs (``zo_perturb``/``zo_reconstruct``)
+rely on Pallas's boundary semantics (out-of-bounds stores of a partial
+output block are dropped, both in interpret mode and under Mosaic).
 """
 from __future__ import annotations
 
@@ -38,8 +48,12 @@ def _gauss_block(start: jax.Array, n: int, salt: jax.Array) -> jax.Array:
     return jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(_TWO_PI * u2)
 
 
+def _grid(n: int, block: int) -> int:
+    return (n + block - 1) // block
+
+
 # --------------------------------------------------------------------------- #
-def _sumsq_kernel(meta_ref, o_ref, *, block: int):
+def _sumsq_kernel(meta_ref, o_ref, *, block: int, n: int):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -49,18 +63,20 @@ def _sumsq_kernel(meta_ref, o_ref, *, block: int):
     salt = meta_ref[0].astype(jnp.uint32)
     offset = meta_ref[1].astype(jnp.uint32)
     g = _gauss_block(offset + jnp.uint32(i * block), block, salt)
-    o_ref[0] += jnp.sum(g * g)
+    # tail mask: the hash yields (garbage) values for any counter, so lanes
+    # past the leaf end must be excluded from the reduction explicitly
+    lane = jax.lax.iota(jnp.int32, block) + i * block
+    o_ref[0] += jnp.sum(jnp.where(lane < n, g * g, 0.0))
 
 
 def zo_sumsq(n: int, salt, offset=0, block: int = 4096, interpret: bool = True) -> jax.Array:
     """||v_leaf||^2 for a hashed Gaussian leaf of n elements (no HBM input)."""
-    assert n % block == 0 or n < block
     block = min(block, n)
     meta = jnp.asarray([salt, offset], jnp.uint32)
     out = pl.pallas_call(
-        functools.partial(_sumsq_kernel, block=block),
+        functools.partial(_sumsq_kernel, block=block, n=n),
         out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
-        grid=(n // block,),
+        grid=(_grid(n, block),),
         in_specs=[pl.BlockSpec((2,), lambda i: (0,))],
         out_specs=pl.BlockSpec((1,), lambda i: (0,)),
         interpret=interpret,
@@ -88,12 +104,11 @@ def zo_perturb(
 ) -> jax.Array:
     n = x.shape[0]
     block = min(block, n)
-    assert n % block == 0
     meta = jnp.asarray([salt, offset], jnp.uint32)
     return pl.pallas_call(
         functools.partial(_perturb_kernel, block=block),
         out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
-        grid=(n // block,),
+        grid=(_grid(n, block),),
         in_specs=[
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((2,), lambda i: (0,)),
@@ -105,32 +120,43 @@ def zo_perturb(
 
 
 # --------------------------------------------------------------------------- #
-def _reconstruct_kernel(salts_ref, coeffs_ref, off_ref, o_ref, *, block: int, m: int):
+def _reconstruct_kernel(salts_ref, coeffs_ref, off_ref, o_ref, *, block: int,
+                        m: int, acc_dtype):
     i = pl.program_id(0)
     start = off_ref[0].astype(jnp.uint32) + jnp.uint32(i * block)
     acc = jnp.zeros((block,), jnp.float32)
     for w in range(m):  # static worker unroll: m gaussians live in registers
         g = _gauss_block(start, block, salts_ref[w].astype(jnp.uint32))
         acc = acc + coeffs_ref[w] * g
+        if acc_dtype != jnp.float32:
+            # round to the accumulator dtype after every worker — the exact
+            # semantics of the tree/fused accumulators, so a bf16 acc_dtype
+            # stays bit-identical across DirectionEngine backends
+            acc = acc.astype(acc_dtype).astype(jnp.float32)
     o_ref[...] = acc
 
 
 def zo_reconstruct(
     n: int,
     salts: jax.Array,    # (m,) uint32 — per-worker leaf salts
-    coeffs: jax.Array,   # (m,) fp32   — c_i * inv_norm_i / m, pre-scaled
+    coeffs: jax.Array,   # (m,) fp32   — c_i * inv_norm_i, pre-scaled
     offset=0,
     block: int = 4096,
+    acc_dtype=jnp.float32,
     interpret: bool = True,
 ) -> jax.Array:
-    """sum_i coeffs_i * v_i for one flat leaf, one pass, no HBM directions."""
+    """sum_i coeffs_i * v_i for one flat leaf, one pass, no HBM directions.
+
+    ``acc_dtype`` rounds the running accumulator after each worker (still in
+    registers — never in HBM), matching the optimizer's acc_dtype knob.
+    """
     m = salts.shape[0]
     block = min(block, n)
-    assert n % block == 0
     return pl.pallas_call(
-        functools.partial(_reconstruct_kernel, block=block, m=m),
+        functools.partial(_reconstruct_kernel, block=block, m=m,
+                          acc_dtype=jnp.dtype(acc_dtype)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
-        grid=(n // block,),
+        grid=(_grid(n, block),),
         in_specs=[
             pl.BlockSpec((m,), lambda i: (0,)),
             pl.BlockSpec((m,), lambda i: (0,)),

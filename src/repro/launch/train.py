@@ -67,6 +67,10 @@ def main(argv=None):
     ap.add_argument("--compress", default="none",
                     choices=["none", "qsgd", "signsgd", "topk"],
                     help="codec on the FO gradient all-reduce")
+    ap.add_argument("--engine", default="fused",
+                    choices=["tree", "fused", "pallas"],
+                    help="DirectionEngine backend for the ZO direction "
+                         "algebra (repro.core.engine)")
     args = ap.parse_args(argv)
 
     n_dev = jax.device_count()
@@ -86,7 +90,7 @@ def main(argv=None):
     d = sum(leaf_dims)
     zo_lr = args.zo_lr if args.zo_lr is not None else args.lr * 50.0 / d
     ho = HOSGDConfig(tau=args.tau, mu=args.mu, m=m, lr=args.lr, zo_lr=zo_lr,
-                     seed=args.seed)
+                     seed=args.seed, engine=args.engine)
     opt = sgd(const_schedule(args.lr))
     codec = get_compressor(args.compress)
     fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,

@@ -128,7 +128,11 @@ def test_selective_scan_matches_model_ssm():
 
 
 # --------------------------------------------------------------------------- #
-@pytest.mark.parametrize("n,block", [(4096, 1024), (8192, 4096), (2048, 2048)])
+@pytest.mark.parametrize("n,block", [
+    (4096, 1024), (8192, 4096), (2048, 2048),
+    # tail blocks: n not a multiple of block (masked boundary path)
+    (5000, 4096), (1000, 512), (37, 8), (3, 4096), (1, 4096),
+])
 def test_zo_kernels_sweep(n, block):
     ss = ops.zo_sumsq(n, 1234, offset=77, block=block)
     np.testing.assert_allclose(float(ss), float(ref.ref_zo_sumsq(n, 1234, 77)),
@@ -144,6 +148,18 @@ def test_zo_kernels_sweep(n, block):
     np.testing.assert_allclose(np.asarray(out),
                                np.asarray(ref.ref_zo_reconstruct(n, salts, coeffs, 9)),
                                rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block", [(1000, 512), (2048, 2048)])
+def test_zo_reconstruct_acc_dtype(n, block):
+    """Per-worker bf16 accumulator rounding matches the oracle bit-for-bit
+    (the rounding quantizes away the kernel/oracle fma-order freedom)."""
+    salts = jnp.asarray([7, 11, 13, 17], jnp.uint32)
+    coeffs = jnp.asarray([0.25, -0.75, 1.5, 0.3], jnp.float32)
+    out = ops.zo_reconstruct(n, salts, coeffs, offset=0, block=block,
+                             acc_dtype="bfloat16")
+    want = ref.ref_zo_reconstruct(n, salts, coeffs, 0, acc_dtype="bfloat16")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
 def test_zo_kernel_matches_optimizer_directions():
