@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
   fig2    — multiclass MLP training (measured, Fig 2)
   kernels — Pallas kernel micro-benches + HBM-byte models
   roofline— dry-run derived roofline terms (if artifacts exist)
+  sim     — time-to-target-loss frontier on the simulated cluster
 
 ``--quick`` trims iteration counts for CI-speed runs.
 """
@@ -22,11 +23,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     choices=["table1", "fig1", "fig2", "kernels", "roofline",
-                             "tau", "comm"])
+                             "tau", "comm", "sim"])
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
     sections = args.only or ["table1", "comm", "kernels", "fig1", "fig2",
-                             "tau", "roofline"]
+                             "tau", "sim", "roofline"]
     failed = []
 
     for sec in sections:
@@ -68,6 +69,9 @@ def main(argv=None):
             elif sec == "roofline":
                 from benchmarks import roofline
                 roofline.main([])
+            elif sec == "sim":
+                from benchmarks import sim_frontier
+                sim_frontier.main(["--smoke"] if args.quick else [])
         except Exception:
             failed.append(sec)
             traceback.print_exc()

@@ -29,6 +29,11 @@ def _flatten_with_names(tree: Any):
 def save(ckpt_dir: str, step: int, tree: Any) -> str:
     """Atomically save ``tree`` under ``ckpt_dir/step_<step>``."""
     names, leaves, _ = _flatten_with_names(tree)
+    # method state may carry python scalars (e.g. the adaptive-tau since_fo
+    # counter); canonicalize via numpy, which keeps int64/float64 width —
+    # jnp.asarray under the default x64-disabled mode would round floats to
+    # fp32 and overflow on ints >= 2**31
+    leaves = [x if hasattr(x, "dtype") else np.asarray(x) for x in leaves]
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
@@ -36,7 +41,7 @@ def save(ckpt_dir: str, step: int, tree: Any) -> str:
         # dtypes numpy can't store (bfloat16) ride as fp32 payloads; the
         # manifest records the logical dtype for exact restore (bf16->f32
         # widening is lossless)
-        dtypes = [str(jnp.asarray(x).dtype) for x in leaves]
+        dtypes = [str(x.dtype) for x in leaves]
         arrays = {}
         for i, x in enumerate(leaves):
             h = jax.device_get(x)
@@ -88,8 +93,11 @@ def restore(ckpt_dir: str, like: Any, step: Optional[int] = None,
             f"checkpoint tree mismatch:\n saved={manifest['names'][:5]}...\n"
             f" expected={names[:5]}..."
         )
+    # 64-bit payloads (canonicalized python scalars) stay numpy: jax's
+    # default x64-disabled mode would silently truncate them to 32 bits
     leaves = [
-        jnp.asarray(data[f"a{i}"]).astype(dt)
+        data[f"a{i}"] if jnp.dtype(dt).itemsize == 8
+        else jnp.asarray(data[f"a{i}"]).astype(dt)
         for i, dt in enumerate(manifest["dtypes"])
     ]
     tree = jax.tree_util.tree_unflatten(treedef, leaves)

@@ -124,6 +124,48 @@ def make_ho_sgd(
     return Method(name, init, step, comm_scalars, fevals, gevals)
 
 
+def adaptive_tau_decision(t: int, since_fo: int, tau_t: int,
+                          base_tau: int) -> tuple:
+    """One adaptive-tau scheduling decision: ``(is_fo, t_step, new_since_fo)``.
+
+    The single home of the adaptive-period logic — ``make_adaptive_ho_sgd``,
+    ``launch.train --tau-schedule`` and the ``repro.sim`` runner all route
+    through here, so the simulator provably exercises the same schedule as
+    the real trainer.  ``t_step`` is the iteration index to hand the
+    underlying step program: FO steps map onto multiples of ``base_tau``
+    (t=0 always FO); ZO steps map t to the t-th positive integer not
+    divisible by ``base_tau`` — injective, so no two adaptive ZO steps ever
+    share a direction seed (t+1 collided with the next step whenever t was a
+    multiple of ``base_tau``: identical perturbations twice).
+    """
+    assert base_tau > 1, "adaptive tau needs a base period >= 2"
+    if t == 0 or since_fo + 1 >= max(1, int(tau_t)):
+        return True, (0 if t == 0 else base_tau * max(t, 1)), 0
+    return False, t + 1 + t // (base_tau - 1), since_fo + 1
+
+
+def parse_tau_schedule(spec: str) -> Callable[[int], int]:
+    """``'const:8'`` or ``'linear:2,16,1000'`` -> tau(t).
+
+    ``linear:start,end,horizon`` ramps the period linearly from ``start`` at
+    t=0 to ``end`` at t >= ``horizon`` — the growing-then-capped schedule
+    that front-loads cheap ZO steps (the ZO approximation error matters
+    most late in training: small gradients vs O(d) estimator variance).
+    """
+    kind, _, arg = spec.partition(":")
+    if kind == "const":
+        tau = int(arg)
+        assert tau >= 1, f"const tau must be >= 1, got {tau}"
+        return lambda t: tau
+    if kind == "linear":
+        start, end, horizon = (int(x) for x in arg.split(","))
+        assert start >= 1 and end >= 1 and horizon >= 1, spec
+        return lambda t: int(round(start + (end - start) * min(t, horizon)
+                                   / horizon))
+    raise ValueError(f"unknown tau schedule {spec!r}; use 'const:K' or "
+                     f"'linear:start,end,horizon'")
+
+
 def make_adaptive_ho_sgd(
     loss_fn: Callable,
     cfg: HOSGDConfig,
@@ -132,11 +174,9 @@ def make_adaptive_ho_sgd(
 ) -> Method:
     """Beyond-paper: HO-SGD with a time-varying period tau(t).
 
-    The paper fixes tau; in practice the ZO approximation error matters most
-    late in training (small gradients vs O(d) estimator variance), so a
-    growing-then-capped tau front-loads cheap ZO steps.  ``tau_schedule(t)``
-    returns the current period; an FO step fires whenever the position
-    within the current period wraps.
+    The paper fixes tau; ``tau_schedule(t)`` returns the current period and
+    an FO step fires whenever the position within the current period wraps
+    (decision logic in ``adaptive_tau_decision``).
     """
     # the base method's ZO branch is keyed on t % cfg.tau != 0 — with tau=1
     # it is unreachable and every "ZO" step would silently run fo_step
@@ -150,22 +190,11 @@ def make_adaptive_ho_sgd(
         return {"base": base.init(params), "since_fo": 0}
 
     def step(t: int, params, state, batch, key=None):
-        tau_t = max(1, int(tau_schedule(t)))
-        since_fo = state["since_fo"]
-        if t == 0 or since_fo + 1 >= tau_t:
-            # reuse the base method's FO branch (t=0 always maps to FO)
-            params, bstate, metrics = base.step(
-                0 if t == 0 else cfg.tau * max(t, 1), params, state["base"],
-                batch, key)
-            return params, {"base": bstate, "since_fo": 0}, metrics
-        # the ZO branch needs t_zo % cfg.tau != 0; map t to the t-th positive
-        # integer not divisible by cfg.tau — injective, so no two adaptive ZO
-        # steps ever share a direction seed (t+1 collided with the next step
-        # whenever t was a multiple of cfg.tau: identical perturbations twice)
-        t_zo = t + 1 + t // (cfg.tau - 1)
-        params, bstate, metrics = base.step(t_zo, params, state["base"],
+        _, t_step, since_fo = adaptive_tau_decision(
+            t, int(state["since_fo"]), tau_schedule(t), cfg.tau)
+        params, bstate, metrics = base.step(t_step, params, state["base"],
                                             batch, key)
-        return params, {"base": bstate, "since_fo": since_fo + 1}, metrics
+        return params, {"base": bstate, "since_fo": since_fo}, metrics
 
     return base._replace(name="ho_sgd_adaptive", init=init, step=step)
 

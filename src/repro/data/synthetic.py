@@ -9,6 +9,7 @@ files are supported via ``repro.data.libsvm`` when present on disk.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Iterator
 
@@ -45,7 +46,10 @@ def make_classification(name: str, n_train: int = 8192, n_test: int = 2048,
     if name not in DATASET_SPECS:
         raise KeyError(f"unknown dataset {name!r}; have {list(DATASET_SPECS)}")
     d, c = DATASET_SPECS[name]
-    rng = np.random.default_rng(seed + hash(name) % (1 << 16))
+    # stable hash: python's str hash is randomized per process, which would
+    # make the "seeded" dataset differ between runs (the sim benchmarks
+    # compare time-to-loss across processes)
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % (1 << 16))
     centers = rng.normal(size=(c, d)) * class_sep
     # anisotropic within-class covariance for a non-trivial decision surface
     mix = rng.normal(size=(c, d, d)) * 0.15 + np.eye(d)

@@ -20,7 +20,9 @@ from repro.checkpoint import save as ckpt_save
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.base import ModelConfig
 from repro.core.distributed import make_distributed_ho_sgd
-from repro.core.ho_sgd import HOSGDConfig
+from repro.core.ho_sgd import (
+    HOSGDConfig, adaptive_tau_decision, parse_tau_schedule,
+)
 from repro.data import shard_batches, token_batches
 from repro.dist import CommLedger, get_compressor
 from repro.dist.sharding import named, param_specs, n_workers
@@ -54,6 +56,10 @@ def main(argv=None):
     ap.add_argument("--reduce", default="smoke", choices=["full", "100m", "smoke"])
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--tau", type=int, default=8)
+    ap.add_argument("--tau-schedule", default=None,
+                    help="adaptive period: 'const:K' or "
+                         "'linear:start,end,horizon' (needs --tau >= 2; "
+                         "default: fixed --tau)")
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--lr", type=float, default=3e-2)
     ap.add_argument("--zo-lr", type=float, default=None)
@@ -96,6 +102,13 @@ def main(argv=None):
     fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,
                                      params_like=params, compressor=codec)
 
+    # adaptive tau: the same decision logic the Method and the simulator use
+    # (core.ho_sgd.adaptive_tau_decision); the fixed-tau default path stays
+    # bit-identical to before (t % tau, step keyed on t itself)
+    tau_sched = parse_tau_schedule(args.tau_schedule) if args.tau_schedule else None
+    if tau_sched is not None and args.tau < 2:
+        raise SystemExit("--tau-schedule needs --tau >= 2 (the ZO seed map)")
+
     with compat.set_mesh(mesh):
         params = jax.device_put(params, named(mesh, param_specs(cfg, params, mesh)))
         opt_state = opt.init(params)
@@ -104,27 +117,33 @@ def main(argv=None):
         zo_j = ledger.wrap("zo", jax.jit(zo))
 
         host = token_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
-        logger = CSVLogger(args.log,
-                           ["step", "order", "loss", "dt", "comm_bytes"])
-        t_prev = time.perf_counter()
-        for t, batch in zip(range(args.steps), shard_batches(host, mesh)):
-            is_fo = t % args.tau == 0
-            step = fo_j if is_fo else zo_j
-            t0 = time.perf_counter()
-            params, opt_state, loss = step(jnp.int32(t), params, opt_state, batch)
-            loss = float(loss)                   # blocks: dispatch is async
-            dt_step = time.perf_counter() - t0
-            if t % 10 == 0 or t == args.steps - 1:
-                now = time.perf_counter()
-                print(f"step {t:5d} ({'FO' if is_fo else 'ZO'}) "
-                      f"loss={loss:.4f} dt={now - t_prev:.2f}s")
-                t_prev = now
-            logger.log(step=t, order=int(is_fo), loss=loss, dt=dt_step,
-                       comm_bytes=ledger.bytes_per_step("fo" if is_fo else "zo"))
-        if args.ckpt:
-            path = ckpt_save(args.ckpt, args.steps, jax.device_get(params))
-            print("checkpoint:", path)
-        logger.close()
+        since_fo = 0
+        with CSVLogger(args.log,
+                       ["step", "order", "loss", "dt", "comm_bytes"]) as logger:
+            t_prev = time.perf_counter()
+            for t, batch in zip(range(args.steps), shard_batches(host, mesh)):
+                if tau_sched is None:
+                    is_fo, t_step = t % args.tau == 0, t
+                else:
+                    is_fo, t_step, since_fo = adaptive_tau_decision(
+                        t, since_fo, tau_sched(t), args.tau)
+                step = fo_j if is_fo else zo_j
+                t0 = time.perf_counter()
+                params, opt_state, loss = step(jnp.int32(t_step), params,
+                                               opt_state, batch)
+                loss = float(loss)               # blocks: dispatch is async
+                dt_step = time.perf_counter() - t0
+                if t % 10 == 0 or t == args.steps - 1:
+                    now = time.perf_counter()
+                    print(f"step {t:5d} ({'FO' if is_fo else 'ZO'}) "
+                          f"loss={loss:.4f} dt={now - t_prev:.2f}s")
+                    t_prev = now
+                logger.log(step=t, order=int(is_fo), loss=loss, dt=dt_step,
+                           comm_bytes=ledger.bytes_per_step(
+                               "fo" if is_fo else "zo"))
+            if args.ckpt:
+                path = ckpt_save(args.ckpt, args.steps, jax.device_get(params))
+                print("checkpoint:", path)
     # dense FO exchange moves gradients in the param dtype (fp32 accumulator
     # when grad_accum microbatches); ZO coefficients are always fp32
     grad_bytes = 4 if cfg.grad_accum > 1 else jnp.dtype(cfg.dtype).itemsize

@@ -32,6 +32,16 @@ class CSVLogger:
     def close(self):
         if self._fh:
             self._fh.close()
+            self._fh = self._writer = None
+
+    # context-manager support: the training drivers hold the file open for
+    # the whole run, so an exception mid-loop must still release the handle
+    def __enter__(self) -> "CSVLogger":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
 
 
 class MeterRegistry:

@@ -1,0 +1,35 @@
+"""repro.sim — discrete-event cluster simulator for the paper's tradeoff.
+
+Turns the three incommensurable cost axes (CommLedger bytes, function
+evals, loss-vs-iteration) into one: time to target loss on a configurable
+simulated cluster.  The scenario substrate for stragglers, heterogeneity,
+elastic clusters and failures — extend ``ClusterSpec``/``simulate`` here
+the way ``repro.dist`` owns sharding and ``DirectionEngine`` owns ZO
+algebra.
+
+  * ``events``  — deterministic event loop, per-worker clocks, the
+    barriered all-reduce primitive.
+  * ``costs``   — pluggable hardware cost models (FLOP-based compute,
+    alpha–beta links); byte counts always come from the ``CommLedger`` /
+    ``dist.compress`` wire estimates, never re-derived.
+  * ``cluster`` — ``ClusterSpec``: heterogeneous speeds, seeded straggler
+    distributions, Poisson failures charged a real checkpoint-restore.
+  * ``runner``  — replays the real step functions from ``core`` /
+    ``core.baselines`` and emits loss-vs-simulated-seconds traces.
+"""
+from repro.sim.cluster import ClusterSpec, bandwidth_constrained  # noqa: F401
+from repro.sim.costs import (  # noqa: F401
+    ComputeModel,
+    LinkModel,
+    StepCost,
+    config_fwd_flops,
+    tree_fwd_flops,
+)
+from repro.sim.events import EventLoop, WorkerClocks, barrier_all_reduce  # noqa: F401
+from repro.sim.runner import (  # noqa: F401
+    SimMethod,
+    SimResult,
+    compute_model_for,
+    make_sim_methods,
+    simulate,
+)

@@ -1,0 +1,107 @@
+"""ClusterSpec: the simulated hardware — worker speeds, links, failures.
+
+One frozen dataclass describes everything stochastic or hardware-shaped
+about a simulated cluster; the spec's ``seed`` drives every draw (straggler
+slowdowns, jitter, failure arrivals), so the determinism contract is simply:
+same ``ClusterSpec`` (including seed) + same replayed method ⇒ identical
+event trace.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Tuple
+
+import numpy as np
+
+from repro.sim.costs import LinkModel
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    """Hardware + fault model for one simulated cluster.
+
+    Compute: ``flops_per_sec`` is the base per-worker throughput;
+    ``rel_speeds`` (len m, default homogeneous) models persistent
+    heterogeneity, while stragglers/jitter are per-(iteration, worker)
+    draws: with probability ``straggler_prob`` a worker's iteration takes
+    ``straggler_slowdown`` times longer, and ``jitter_sigma`` adds
+    lognormal multiplicative noise on top.
+
+    Failures: a Poisson process at ``fail_rate`` failures per simulated
+    second (cluster-wide).  A failure kills the in-flight iteration; the
+    cluster restores the last checkpoint written every ``ckpt_every``
+    iterations (a REAL ``repro.checkpoint`` round-trip in the runner) and
+    pays ``restart_time`` simulated seconds before resuming.
+    """
+
+    m: int = 4
+    flops_per_sec: float = 1e12
+    rel_speeds: Tuple[float, ...] = ()
+    alpha: float = 1e-4                  # link latency per collective (s)
+    bandwidth: float = 1e9               # bytes/s per worker
+    straggler_prob: float = 0.0
+    straggler_slowdown: float = 4.0
+    jitter_sigma: float = 0.0
+    fail_rate: float = 0.0               # failures per simulated second
+    restart_time: float = 30.0           # checkpoint-restore charge (s)
+    ckpt_every: int = 0                  # iterations between sim checkpoints
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.m >= 1
+        assert self.bandwidth > 0 and self.flops_per_sec > 0
+        if self.rel_speeds:
+            assert len(self.rel_speeds) == self.m, \
+                f"{len(self.rel_speeds)} rel_speeds for m={self.m}"
+            assert all(s > 0 for s in self.rel_speeds)
+        if self.fail_rate > 0:
+            assert self.ckpt_every > 0, \
+                "failure injection needs ckpt_every > 0 (restore source)"
+
+    # ---- derived models ---------------------------------------------------- #
+    @property
+    def link(self) -> LinkModel:
+        return LinkModel(alpha=self.alpha, beta=1.0 / self.bandwidth)
+
+    def speeds(self) -> Tuple[float, ...]:
+        return self.rel_speeds if self.rel_speeds else (1.0,) * self.m
+
+    def with_(self, **kw) -> "ClusterSpec":
+        return replace(self, **kw)
+
+    # ---- seeded draws (all randomness enters the sim here) ----------------- #
+    def rng(self) -> np.random.Generator:
+        return np.random.default_rng(self.seed)
+
+    def draw_slowdowns(self, rng: np.random.Generator) -> np.ndarray:
+        """(m,) multiplicative time factors for one iteration — combines the
+        persistent ``rel_speeds`` with this iteration's straggler/jitter
+        draws.  Draw order is fixed (jitter, then stragglers, workers in
+        index order) so the trace is reproducible."""
+        mult = np.ones(self.m)
+        if self.jitter_sigma > 0:
+            mult *= rng.lognormal(0.0, self.jitter_sigma, self.m)
+        if self.straggler_prob > 0:
+            hit = rng.random(self.m) < self.straggler_prob
+            mult = np.where(hit, mult * self.straggler_slowdown, mult)
+        return mult / np.asarray(self.speeds())
+
+    def draw_failure_gap(self, rng: np.random.Generator) -> float:
+        """Seconds until the next failure (inf when failures are off)."""
+        if self.fail_rate <= 0:
+            return math.inf
+        return float(rng.exponential(1.0 / self.fail_rate))
+
+
+def bandwidth_constrained(m: int = 4, *, seed: int = 0,
+                          bandwidth: float = 1e5,
+                          alpha: float = 1e-5,
+                          flops_per_sec: float = 1e9) -> ClusterSpec:
+    """The paper's target regime: links are the bottleneck, compute is not.
+
+    A d-dim fp32 all-reduce costs ``4*d/bandwidth`` — orders of magnitude
+    above both the per-collective latency and a function evaluation — which
+    is exactly when amortizing FO exchanges over tau ZO iterations pays."""
+    return ClusterSpec(m=m, flops_per_sec=flops_per_sec, alpha=alpha,
+                       bandwidth=bandwidth, seed=seed)

@@ -1,0 +1,105 @@
+"""Pluggable hardware cost models: compute time from FLOP counts, link time
+from an alpha–beta model.
+
+The compute side prices the two oracle kinds the paper distinguishes — a
+first-order gradient (forward + backward) and a zeroth-order function
+evaluation — from per-problem FLOP counts, so an iteration's time is
+``(fevals + ratio * gevals) * fwd_flops / flops_per_sec``.  The counts per
+iteration come from the replayed ``Method``'s analytic cost model
+(``Method.fevals`` / ``Method.gevals``, resolved per step order by the
+runner), never re-invented here.
+
+The communication side is the classic alpha–beta model: a collective moving
+``nbytes`` (per worker, the ``CommLedger`` receive convention) costs
+``alpha + nbytes / bandwidth``.  Byte counts are NOT computed in this module
+— the runner reads them from the ``CommLedger`` of the replayed step
+programs, or from ``repro.dist.compress`` wire estimates (see
+``repro.sim.runner``), so the simulator can never drift from what the real
+steps book.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """alpha–beta link: ``time(n) = alpha + n * beta`` (beta = 1/bandwidth)."""
+
+    alpha: float          # per-collective latency, seconds
+    beta: float           # seconds per byte
+
+    def time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.alpha + float(nbytes) * self.beta
+
+
+@dataclass(frozen=True)
+class ComputeModel:
+    """Prices oracle calls on one worker's batch shard.
+
+    ``fwd_flops`` is the FLOP count of ONE loss evaluation on one worker's
+    shard; a gradient evaluation (forward + backward) costs
+    ``fwd_bwd_ratio`` times that (3.0 is the standard dense-matmul
+    estimate: backward ≈ 2× forward).
+    """
+
+    fwd_flops: float
+    flops_per_sec: float
+    fwd_bwd_ratio: float = 3.0
+
+    def flops(self, fevals: float, gevals: float) -> float:
+        return (fevals + self.fwd_bwd_ratio * gevals) * self.fwd_flops
+
+    def time(self, fevals: float, gevals: float, speed: float = 1.0) -> float:
+        return self.flops(fevals, gevals) / (self.flops_per_sec * speed)
+
+
+@dataclass(frozen=True)
+class StepCost:
+    """One iteration's priced quantities (per worker)."""
+
+    fevals: float         # zeroth-order oracle calls
+    gevals: float         # first-order oracle calls
+    comm_bytes: int       # wire bytes per worker (0 = no collective)
+
+
+def tree_fwd_flops(params_like: Any, per_worker_batch: int) -> float:
+    """Dense estimate for an arbitrary parameter tree: 2 FLOPs per parameter
+    per sample (one multiply-add per weight — exact for the MLP/quadratic
+    problems the sim tests replay)."""
+    import jax
+
+    d = sum(int(x.size) for x in jax.tree.leaves(params_like))
+    return 2.0 * d * per_worker_batch
+
+
+def config_fwd_flops(cfg: Any, per_worker_batch: int, seq: int) -> float:
+    """Transformer estimate from a ``ModelConfig``: 2 * active params per
+    token (the standard decoder FLOP model; attention's quadratic term is
+    below the matmul term at the seq lengths the sim rehearses)."""
+    return 2.0 * cfg.param_count(active_only=True) * per_worker_batch * seq
+
+
+def per_order_step_costs(fevals: float, gevals: float, comm_bytes: int) -> StepCost:
+    """Convenience constructor kept for symmetry with the runner factories."""
+    return StepCost(float(fevals), float(gevals), int(comm_bytes))
+
+
+def validate_against_method(method, d: int, costs_by_order, order_mix) -> None:
+    """Cross-check: per-order eval counts, amortized over the order mix,
+    must reproduce the Method's analytic per-iteration counters.
+
+    ``order_mix`` maps order -> fraction of iterations; used by tests so a
+    runner-constructed cost table can never drift from ``Method.fevals`` /
+    ``Method.gevals``.
+    """
+    fe = sum(order_mix[o] * costs_by_order[o].fevals for o in order_mix)
+    ge = sum(order_mix[o] * costs_by_order[o].gevals for o in order_mix)
+    assert math.isclose(fe, method.fevals(d), rel_tol=1e-9, abs_tol=1e-12), \
+        f"fevals drift: per-order {fe} vs analytic {method.fevals(d)}"
+    assert math.isclose(ge, method.gevals(d), rel_tol=1e-9, abs_tol=1e-12), \
+        f"gevals drift: per-order {ge} vs analytic {method.gevals(d)}"

@@ -1,0 +1,118 @@
+"""Deterministic discrete-event core: per-worker clocks + a totally ordered
+event trace.
+
+The simulator's determinism guarantee (README §repro.sim) rests entirely on
+this module: events are ordered by ``(time, seq)`` where ``seq`` is the
+scheduling order, so ties break FIFO and two runs that schedule the same
+events in the same order pop them — and record them — identically.  Nothing
+here reads wall clocks or global RNG state; all randomness enters through
+the seeded draws in ``repro.sim.cluster``.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import List, NamedTuple, Sequence, Tuple
+
+
+class Event(NamedTuple):
+    time: float
+    seq: int       # scheduling order — the deterministic tiebreak
+    kind: str
+    worker: int    # -1 for cluster-wide events
+
+
+#: what the determinism tests compare: (time, kind, worker) triples in the
+#: exact order the loop committed them.
+TraceEntry = Tuple[float, str, int]
+
+
+@dataclass
+class EventLoop:
+    """Min-heap of future events + the committed trace."""
+
+    _heap: List[Event] = field(default_factory=list)
+    _seq: int = 0
+    now: float = 0.0
+    trace: List[TraceEntry] = field(default_factory=list)
+
+    def schedule(self, at: float, kind: str, worker: int = -1) -> Event:
+        assert at >= self.now - 1e-12, f"scheduling into the past: {at} < {self.now}"
+        ev = Event(float(at), self._seq, kind, worker)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        """Commit the earliest pending event: advances ``now``, records it."""
+        ev = heapq.heappop(self._heap)
+        self.now = max(self.now, ev.time)
+        self.trace.append((ev.time, ev.kind, ev.worker))
+        return ev
+
+    def record(self, at: float, kind: str, worker: int = -1) -> None:
+        """Commit an instantaneous event (no heap round-trip)."""
+        self.now = max(self.now, float(at))
+        self.trace.append((float(at), kind, worker))
+
+    @property
+    def pending(self) -> int:
+        return len(self._heap)
+
+
+@dataclass
+class WorkerClocks:
+    """One simulated clock per worker."""
+
+    t: List[float]
+
+    @classmethod
+    def start(cls, m: int, at: float = 0.0) -> "WorkerClocks":
+        return cls([float(at)] * m)
+
+    @property
+    def m(self) -> int:
+        return len(self.t)
+
+    def advance(self, worker: int, dt: float) -> float:
+        self.t[worker] += dt
+        return self.t[worker]
+
+    def barrier(self) -> float:
+        """Synchronize: every clock jumps to the latest — returns that time."""
+        sync = max(self.t)
+        self.t = [sync] * self.m
+        return sync
+
+    def set_all(self, at: float) -> None:
+        self.t = [float(at)] * self.m
+
+
+def barrier_all_reduce(
+    loop: EventLoop,
+    clocks: WorkerClocks,
+    compute_dts: Sequence[float],
+    comm_time: float,
+    *,
+    kind: str = "all_reduce",
+) -> float:
+    """The simulator's one collective: per-worker compute, barrier, exchange.
+
+    Schedules a ``compute`` completion per worker, drains them through the
+    heap (so the trace interleaves workers in global time order), barriers,
+    then charges ``comm_time`` once — the bulk-synchronous model every
+    method in ``repro.core`` follows.  Returns the completion time, with
+    every worker clock advanced to it.  ``comm_time == 0`` records a plain
+    ``barrier`` event (an iteration with no exchange, e.g. PA-SGD between
+    averaging rounds).
+    """
+    assert len(compute_dts) == clocks.m
+    for i, dt in enumerate(compute_dts):
+        loop.schedule(clocks.t[i] + dt, "compute", i)
+    for _ in range(clocks.m):
+        ev = loop.pop()
+        clocks.t[ev.worker] = ev.time
+    done = clocks.barrier() + (comm_time if comm_time > 0 else 0.0)
+    loop.record(done, kind if comm_time > 0 else "barrier")
+    clocks.set_all(done)
+    return done

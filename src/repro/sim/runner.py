@@ -1,0 +1,417 @@
+"""Replay the real training steps through the discrete-event cluster model.
+
+``simulate`` drives an actual jitted step function (the same programs
+``launch.train`` runs) one iteration at a time; the event loop prices each
+iteration on the simulated cluster — per-worker compute from the FLOP
+model, a barriered alpha–beta collective for the exchange — and emits a
+loss-vs-simulated-seconds history.  That collapses the paper's three
+incommensurable axes (bytes, function evals, loss-vs-iteration) onto one:
+time to target loss.
+
+Byte counts are never re-derived analytically:
+
+* HO-SGD (fixed and adaptive tau), sync-SGD and ZO-SGD replay the
+  *distributed* step programs from ``core.distributed`` wrapped in a
+  ``CommLedger`` — each iteration is priced at exactly the bytes its
+  compiled program booked (including any FO compressor's wire estimate).
+* PA-SGD / RI-SGD exchange the model tree itself every tau iterations; the
+  byte count is measured from the live parameter tree with the ledger's own
+  ``_tree_nbytes``.
+* QSGD's wire size comes from ``repro.dist.compress.qsgd(s).nbytes`` — the
+  repo's one QSGD wire model.
+
+Failure injection does REAL checkpoint round-trips through
+``repro.checkpoint``: the cluster periodically saves ``{params, state}``,
+and a failure restores from the latest step — so a lossy method-state
+round-trip would corrupt the simulated run, not just a counter.
+"""
+from __future__ import annotations
+
+import math
+import shutil
+import tempfile
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore as ckpt_restore
+from repro.checkpoint import save as ckpt_save
+from repro.core.baselines import make_pa_sgd, make_qsgd, make_ri_sgd
+from repro.core.distributed import make_fo_step, make_zo_step
+from repro.core.ho_sgd import HOSGDConfig, adaptive_tau_decision
+from repro.dist import CommLedger
+from repro.dist import compress as compress_mod
+from repro.dist.collectives import _tree_nbytes
+from repro.launch.mesh import make_test_mesh
+from repro.opt.optimizers import Optimizer, const_schedule, sgd
+from repro.sim.cluster import ClusterSpec
+from repro.sim.costs import ComputeModel, StepCost, tree_fwd_flops
+from repro.sim.events import EventLoop, WorkerClocks, barrier_all_reduce
+
+
+@dataclass
+class SimMethod:
+    """A replayable method: real step functions + per-iteration price tags.
+
+    ``step`` has the ``Method.step`` signature; ``costs_for(t, order)``
+    prices the iteration that just ran (the runner calls it after ``step``,
+    so ledger-backed byte counts are always taken from a traced program).
+    """
+
+    name: str
+    init: Callable[[Any], Any]
+    step: Callable[..., tuple]
+    costs_for: Callable[[int, int], StepCost]
+    ledger: Optional[CommLedger] = None
+
+
+@dataclass
+class SimResult:
+    """Loss-vs-simulated-seconds history plus the committed event trace."""
+
+    name: str
+    steps: List[int] = field(default_factory=list)      # iteration index
+    times: List[float] = field(default_factory=list)    # completion (sim s)
+    losses: List[float] = field(default_factory=list)   # training-batch loss
+    orders: List[int] = field(default_factory=list)
+    comm_bytes: List[int] = field(default_factory=list)  # wire bytes/worker
+    feval_cum: List[float] = field(default_factory=list)
+    evals: List[Tuple[float, float, float]] = field(default_factory=list)
+    #: committed (time, kind, worker) entries — the determinism contract
+    trace: List[tuple] = field(default_factory=list)
+    compute_s: float = 0.0      # critical-path compute seconds
+    comm_s: float = 0.0
+    feval_s: float = 0.0        # compute seconds spent on function evals
+    geval_s: float = 0.0        # compute seconds spent on gradient evals
+    bytes_total: int = 0        # per-worker wire bytes, summed over iters
+    failures: int = 0
+    params: Any = None
+
+    @property
+    def sim_seconds(self) -> float:
+        return self.times[-1] if self.times else 0.0
+
+    def _series(self) -> List[Tuple[float, float, float]]:
+        """(sim_time, value, feval_seconds) — eval series when present
+        (stable held-out loss), else the noisy training-loss series."""
+        if self.evals:
+            return self.evals
+        return list(zip(self.times, self.losses, self.feval_cum))
+
+    def time_to_loss(self, target: float) -> float:
+        for t_sim, v, _ in self._series():
+            if v <= target:
+                return t_sim
+        return math.inf
+
+    def feval_seconds_to_loss(self, target: float) -> float:
+        for _, v, fs in self._series():
+            if v <= target:
+                return fs
+        return math.inf
+
+    def summary(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "iters": len(self.steps),
+            "sim_seconds": self.sim_seconds,
+            "compute_s": self.compute_s,
+            "comm_s": self.comm_s,
+            "feval_s": self.feval_s,
+            "geval_s": self.geval_s,
+            "bytes_per_worker": self.bytes_total,
+            "failures": self.failures,
+            "final_loss": self.losses[-1] if self.losses else math.nan,
+        }
+
+
+def compute_model_for(params_like: Any, cluster: ClusterSpec,
+                      per_worker_batch: int, *,
+                      fwd_flops: Optional[float] = None) -> ComputeModel:
+    """Default FLOP pricing for a parameter tree on this cluster."""
+    return ComputeModel(
+        fwd_flops=(fwd_flops if fwd_flops is not None
+                   else tree_fwd_flops(params_like, per_worker_batch)),
+        flops_per_sec=cluster.flops_per_sec,
+    )
+
+
+def simulate(
+    sm: SimMethod,
+    params: Any,
+    batches,                      # iterable of (m*B, ...) global batches
+    cluster: ClusterSpec,
+    n_iters: int,
+    *,
+    compute: ComputeModel,
+    eval_fn: Optional[Callable[[Any], float]] = None,
+    eval_every: int = 0,
+    target_loss: Optional[float] = None,
+    ckpt_dir: Optional[str] = None,
+    key=None,
+    max_failures: int = 100,
+) -> SimResult:
+    """Run ``sm`` for up to ``n_iters`` committed iterations of simulated
+    time (early-stop at ``target_loss``); returns the priced history.
+
+    Determinism: same ``cluster`` (seed included), same method and data ⇒
+    bit-identical ``SimResult.trace``.  All randomness flows from
+    ``cluster.rng()`` in a fixed draw order; simulated time never reads a
+    wall clock.
+    """
+    loop = EventLoop()
+    clocks = WorkerClocks.start(cluster.m)
+    rng = cluster.rng()
+    link = cluster.link
+    state = sm.init(params)
+    res = SimResult(name=sm.name)
+    it = iter(batches)
+    if eval_fn is not None and eval_every <= 0:
+        eval_every = 1
+
+    tmp = None
+    use_ckpt = cluster.ckpt_every > 0
+    last_ckpt = 0       # the step THIS run last saved (a caller-supplied
+    if use_ckpt:        # ckpt_dir may hold stale checkpoints from other runs)
+        if ckpt_dir is None:
+            tmp = tempfile.mkdtemp(prefix="repro_sim_ckpt_")
+            ckpt_dir = tmp
+        ckpt_save(ckpt_dir, 0, {"params": params, "state": state})
+    next_fail = cluster.draw_failure_gap(rng)
+
+    t = 0
+    try:
+        while t < n_iters:
+            batch = next(it)
+            new_params, new_state, metrics = sm.step(t, params, state, batch,
+                                                     key)
+            order = int(metrics["order"])
+            sc = sm.costs_for(t, order)
+            # price the iteration (host floats only; fixed draw order)
+            slow = cluster.draw_slowdowns(rng)
+            base_dt = compute.time(sc.fevals, sc.gevals)
+            dts = [base_dt * float(s) for s in slow]
+            comm_time = link.time(sc.comm_bytes)
+            done_tent = max(c + dt for c, dt in zip(clocks.t, dts)) + comm_time
+
+            if next_fail < done_tent:
+                # the failure lands inside this iteration: its work is lost,
+                # the cluster restores the last checkpoint (a real
+                # repro.checkpoint round-trip) and pays the restart charge
+                victim = int(rng.integers(cluster.m))
+                loop.record(next_fail, "fail", victim)
+                restored, rstep = ckpt_restore(
+                    ckpt_dir, {"params": params, "state": state},
+                    step=last_ckpt)
+                params, state = restored["params"], restored["state"]
+                t = int(rstep)
+                resume = next_fail + cluster.restart_time
+                loop.record(resume, "restore")
+                clocks.set_all(resume)
+                res.failures += 1
+                if res.failures >= max_failures:
+                    break
+                next_fail = resume + cluster.draw_failure_gap(rng)
+                continue
+
+            # commit: drain per-worker compute through the event loop, then
+            # the barriered exchange
+            done = barrier_all_reduce(loop, clocks, dts, comm_time)
+            dt_crit = max(dts)
+            res.compute_s += dt_crit
+            res.comm_s += comm_time
+            if order == 0:
+                res.feval_s += dt_crit
+            else:
+                res.geval_s += dt_crit
+            res.bytes_total += sc.comm_bytes
+            params, state = new_params, new_state
+            res.steps.append(t)
+            res.times.append(done)
+            res.losses.append(float(metrics["loss"]))
+            res.orders.append(order)
+            res.comm_bytes.append(sc.comm_bytes)
+            res.feval_cum.append(res.feval_s)
+            t += 1
+
+            if use_ckpt and t % cluster.ckpt_every == 0:
+                ckpt_save(ckpt_dir, t, {"params": params, "state": state})
+                last_ckpt = t
+            if eval_fn is not None and t % eval_every == 0:
+                v = float(eval_fn(params))
+                res.evals.append((done, v, res.feval_s))
+                if target_loss is not None and v <= target_loss:
+                    break
+            elif (eval_fn is None and target_loss is not None
+                    and res.losses[-1] <= target_loss):
+                break
+    finally:
+        if tmp is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+    res.trace = list(loop.trace)
+    res.params = params
+    return res
+
+
+# --------------------------------------------------------------------------- #
+# method factories
+# --------------------------------------------------------------------------- #
+def _ho_family(
+    loss_fn: Callable,
+    cluster: ClusterSpec,
+    *,
+    name: str,
+    tau: int,
+    lr: float,
+    zo_lr: Optional[float],
+    mu: float,
+    seed: int,
+    opt: Optional[Optimizer] = None,
+    codec=None,
+    tau_schedule: Optional[Callable[[int], int]] = None,
+    zo_only: bool = False,
+    engine: str = "fused",
+) -> SimMethod:
+    """HO-SGD spectrum on the real distributed step programs (1x1 mesh,
+    ``m`` simulated workers in-program — the 0.4.x auto-sharded ZO path),
+    wrapped in a ``CommLedger`` so costs_for reads measured bytes."""
+    mesh = make_test_mesh(data=1, model=1)
+    ho = HOSGDConfig(tau=tau, mu=mu, m=cluster.m, lr=lr, zo_lr=zo_lr,
+                     seed=seed, engine=engine)
+    opt = opt or sgd(const_schedule(lr))
+    ledger = CommLedger()
+    fo = make_fo_step(loss_fn, mesh, opt, compressor=codec, seed=seed)
+    zo = make_zo_step(loss_fn, mesh, ho, opt, m=cluster.m)
+    fo_j = ledger.wrap("fo", jax.jit(fo))
+    zo_j = ledger.wrap("zo", jax.jit(zo))
+
+    # the since-FO counter rides in the sim state so a checkpoint restore
+    # also restores the adaptive schedule position
+    def init(params):
+        return {"opt": opt.init(params), "since_fo": 0}
+
+    def step(t, params, state, batch, key=None):
+        if zo_only:
+            is_fo, t_step, since = False, t, int(state["since_fo"]) + 1
+        elif tau_schedule is not None:
+            is_fo, t_step, since = adaptive_tau_decision(
+                t, int(state["since_fo"]), tau_schedule(t), tau)
+        else:
+            is_fo = t % tau == 0
+            t_step = t
+            since = 0 if is_fo else int(state["since_fo"]) + 1
+        params, opt_state, loss = (fo_j if is_fo else zo_j)(
+            jnp.int32(t_step), params, state["opt"], batch)
+        return params, {"opt": opt_state, "since_fo": since}, {
+            "loss": loss, "order": 1 if is_fo else 0}
+
+    def costs_for(t, order):
+        # the FO iteration is one gradient eval; the ZO iteration is two
+        # function evals per worker (eq. 4's forward differences) — the
+        # per-order resolution of Method.fevals/gevals.  Bytes come from
+        # what the traced program booked.
+        if order == 1:
+            return StepCost(0.0, 1.0, ledger.bytes_per_step("fo"))
+        return StepCost(2.0, 0.0, ledger.bytes_per_step("zo"))
+
+    return SimMethod(name, init, step, costs_for, ledger)
+
+
+def _averaging_baseline(
+    which: str,
+    loss_fn: Callable,
+    params_like: Any,
+    cluster: ClusterSpec,
+    *,
+    tau: int,
+    lr: float,
+    mu_r: float = 0.25,
+    qsgd_s: int = 8,
+) -> SimMethod:
+    d = sum(int(x.size) for x in jax.tree.leaves(params_like))
+    if which == "pa_sgd":
+        meth = make_pa_sgd(loss_fn, cluster.m, tau, lr)
+    elif which == "ri_sgd":
+        meth = make_ri_sgd(loss_fn, cluster.m, tau, lr, mu_r=mu_r)
+    elif which == "qsgd":
+        meth = make_qsgd(loss_fn, cluster.m, qsgd_s, lr)
+    else:
+        raise ValueError(which)
+
+    # PA/RI move the model tree itself on averaging rounds — bytes measured
+    # from the live tree (the ledger's own counter), not a formula on d
+    model_bytes = _tree_nbytes(params_like)
+    # QSGD's wire size: the repo's one QSGD wire model (per-leaf headers)
+    qsgd_bytes = sum(compress_mod.qsgd(qsgd_s).nbytes(int(x.size))
+                     for x in jax.tree.leaves(params_like))
+
+    def costs_for(t, order):
+        fe, ge = meth.fevals(d), meth.gevals(d)
+        if which == "qsgd":
+            return StepCost(fe, ge, qsgd_bytes)
+        synced = (t + 1) % tau == 0
+        return StepCost(fe, ge, model_bytes if synced else 0)
+
+    return SimMethod(which, meth.init, meth.step, costs_for)
+
+
+def make_sim_methods(
+    loss_fn: Callable,
+    params_like: Any,
+    cluster: ClusterSpec,
+    *,
+    tau: int = 8,
+    lr: float = 0.05,
+    zo_lr: Optional[float] = None,
+    mu: float = 1e-3,
+    seed: int = 0,
+    codec=None,
+    tau_schedule: Optional[Callable[[int], int]] = None,
+    mu_r: float = 0.25,
+    qsgd_s: int = 8,
+    engine: str = "fused",
+    which: Optional[List[str]] = None,
+) -> Dict[str, SimMethod]:
+    """Build the paper's method zoo as replayable ``SimMethod``s.
+
+    ``zo_lr`` defaults to the paper's ``lr * 30 / d`` scaling.  ``codec``
+    (a ``repro.dist.Compressor``) compresses the HO/sync FO exchange and is
+    priced at its booked wire bytes.  ``tau_schedule`` drives
+    ``ho_sgd_adaptive`` (default: linear ramp 2 -> tau over 10*tau iters).
+    """
+    d = sum(int(x.size) for x in jax.tree.leaves(params_like))
+    zo_lr = zo_lr if zo_lr is not None else lr * 30.0 / d
+    horizon = max(1, 10 * tau)
+    sched = tau_schedule or (
+        lambda t: int(round(2 + (tau - 2) * min(t, horizon) / horizon)))
+    kw = dict(lr=lr, mu=mu, seed=seed, engine=engine)
+    builders: Dict[str, Callable[[], SimMethod]] = {
+        "ho_sgd": lambda: _ho_family(
+            loss_fn, cluster, name="ho_sgd", tau=tau, zo_lr=zo_lr,
+            codec=codec, **kw),
+        "ho_sgd_adaptive": lambda: _ho_family(
+            loss_fn, cluster, name="ho_sgd_adaptive", tau=tau, zo_lr=zo_lr,
+            codec=codec, tau_schedule=sched, **kw),
+        "sync_sgd": lambda: _ho_family(
+            loss_fn, cluster, name="sync_sgd", tau=1, zo_lr=None,
+            codec=codec, **kw),
+        "zo_sgd": lambda: _ho_family(
+            loss_fn, cluster, name="zo_sgd", tau=max(2, tau), zo_lr=zo_lr,
+            zo_only=True, **kw),
+        "pa_sgd": lambda: _averaging_baseline(
+            "pa_sgd", loss_fn, params_like, cluster, tau=tau, lr=lr),
+        "ri_sgd": lambda: _averaging_baseline(
+            "ri_sgd", loss_fn, params_like, cluster, tau=tau, lr=lr,
+            mu_r=mu_r),
+        "qsgd": lambda: _averaging_baseline(
+            "qsgd", loss_fn, params_like, cluster, tau=tau, lr=lr,
+            qsgd_s=qsgd_s),
+    }
+    names = which or list(builders)
+    unknown = [n for n in names if n not in builders]
+    if unknown:
+        raise ValueError(f"unknown sim methods {unknown}; have "
+                         f"{sorted(builders)}")
+    return {n: builders[n]() for n in names}

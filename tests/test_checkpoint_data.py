@@ -90,3 +90,70 @@ def test_libsvm_parser(tmp_path):
     assert x.shape == (3, 3)
     np.testing.assert_allclose(x[0], [0.5, 0.0, 2.0])
     np.testing.assert_array_equal(y, [0, 1, 0])  # remapped to 0..C-1
+
+
+# --------------------------------------------------------------------------- #
+# method-STATE round-tripping: the sim's failure injection restores optimizer
+# state and the adaptive-tau counter from checkpoints, so a lossy round-trip
+# would silently corrupt simulated runs (and real resumes)
+# --------------------------------------------------------------------------- #
+def _ckpt_quad_loss(params, batch):
+    import jax.numpy as jnp
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def test_checkpoint_method_state_roundtrip_adaptive(tmp_path):
+    """Interrupt adaptive HO-SGD mid-schedule; the restored replica must
+    continue bit-identically (params, momentum AND since_fo counter)."""
+    import jax.numpy as jnp
+    from repro.core.ho_sgd import HOSGDConfig, make_adaptive_ho_sgd
+    from repro.opt.optimizers import const_schedule, sgd
+
+    cfg = HOSGDConfig(tau=4, mu=1e-3, m=2, lr=0.1, zo_lr=0.01, momentum=0.9)
+    meth = make_adaptive_ho_sgd(
+        _ckpt_quad_loss, cfg, tau_schedule=lambda t: 2 + t // 2,
+        opt=sgd(const_schedule(cfg.lr), cfg.momentum))
+    params = {"x": jnp.zeros((16,), jnp.float32)}
+    batch = {"t": jnp.ones((4, 16), jnp.float32)}
+
+    state = meth.init(params)
+    for t in range(3):                      # stop mid-period: since_fo != 0
+        params, state, _ = meth.step(t, params, state, batch)
+    assert int(state["since_fo"]) > 0
+    save(str(tmp_path), 3, {"params": params, "state": state})
+
+    restored, step = restore(str(tmp_path), {"params": params, "state": state})
+    assert step == 3
+    assert int(restored["state"]["since_fo"]) == int(state["since_fo"])
+
+    # momentum buffers restored exactly
+    for a, b in zip(jax.tree.leaves(state["base"]),
+                    jax.tree.leaves(restored["state"]["base"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert jnp.asarray(a).dtype == jnp.asarray(b).dtype
+
+    # continuing from the restored replica is bit-identical to the live run
+    live_p, live_s = params, state
+    rest_p, rest_s = restored["params"], restored["state"]
+    for t in range(3, 6):
+        live_p, live_s, live_m = meth.step(t, live_p, live_s, batch)
+        rest_p, rest_s, rest_m = meth.step(t, rest_p, rest_s, batch)
+        assert int(live_m["order"]) == int(rest_m["order"])
+    for a, b in zip(jax.tree.leaves(live_p), jax.tree.leaves(rest_p)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(live_s["since_fo"]) == int(rest_s["since_fo"])
+
+
+def test_checkpoint_python_scalar_leaves(tmp_path):
+    """Python int/float leaves (schedule counters) survive save/restore
+    EXACTLY — including non-fp32-representable floats and ints >= 2**31
+    (they ride as 64-bit numpy, never through jax's x64-disabled default)."""
+    tree = {"w": jnp.ones((3,), jnp.float32), "since_fo": 5, "lr": 0.1,
+            "tokens_seen": 2**40 + 3}
+    save(str(tmp_path), 0, tree)
+    got, _ = restore(str(tmp_path), tree)
+    assert int(got["since_fo"]) == 5
+    assert float(got["lr"]) == 0.1
+    assert int(got["tokens_seen"]) == 2**40 + 3
+    np.testing.assert_array_equal(np.asarray(got["w"]), 1.0)
+    assert got["w"].dtype == jnp.float32

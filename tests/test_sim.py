@@ -1,0 +1,240 @@
+"""repro.sim: event-loop determinism, cluster scenarios, and the paper's
+qualitative Table-1 ordering on simulated wall-clock."""
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.sim import (
+    ClusterSpec,
+    ComputeModel,
+    EventLoop,
+    WorkerClocks,
+    barrier_all_reduce,
+    compute_model_for,
+    make_sim_methods,
+    simulate,
+)
+from repro.sim.costs import LinkModel, StepCost, validate_against_method
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+QUAD_D, QUAD_M = 64, 4
+
+
+def quad_problem():
+    params = {"x": jnp.zeros((QUAD_D,), jnp.float32)}
+    batch = {"t": jnp.ones((2 * QUAD_M, QUAD_D), jnp.float32)}
+    return params, batch
+
+
+def quad_batches(batch):
+    while True:
+        yield batch
+
+
+def run_quad(cluster, *, which="ho_sgd", n_iters=12, tau=4, zo_lr=0.05,
+             target_loss=None, **sim_kw):
+    params, batch = quad_problem()
+    sm = make_sim_methods(quad_loss, params, cluster, tau=tau, lr=0.1,
+                          zo_lr=zo_lr, which=[which])[which]
+    compute = compute_model_for(params, cluster, 2)
+    return simulate(sm, params, quad_batches(batch), cluster, n_iters,
+                    compute=compute, target_loss=target_loss, **sim_kw)
+
+
+# --------------------------------------------------------------------------- #
+# events: the determinism core
+# --------------------------------------------------------------------------- #
+def test_event_loop_fifo_tiebreak():
+    loop = EventLoop()
+    for w in (3, 1, 2):            # same time: pop order = scheduling order
+        loop.schedule(1.0, "compute", w)
+    loop.schedule(0.5, "compute", 9)
+    assert [loop.pop().worker for _ in range(4)] == [9, 3, 1, 2]
+    assert loop.now == 1.0
+    assert [e[0] for e in loop.trace] == [0.5, 1.0, 1.0, 1.0]
+
+
+def test_barrier_all_reduce_semantics():
+    loop, clocks = EventLoop(), WorkerClocks.start(3, at=1.0)
+    link = LinkModel(alpha=0.5, beta=0.125)
+    done = barrier_all_reduce(loop, clocks, [0.1, 0.7, 0.3],
+                              link.time(8))    # 0.5 + 8*0.125 = 1.5
+    assert done == pytest.approx(1.0 + 0.7 + 1.5)
+    assert clocks.t == [done] * 3
+    kinds = [k for _, k, _ in loop.trace]
+    assert kinds == ["compute"] * 3 + ["all_reduce"]
+    # compute events drained in global time order, not worker order
+    assert [w for _, k, w in loop.trace if k == "compute"] == [0, 2, 1]
+
+
+def test_barrier_without_exchange_records_barrier():
+    loop, clocks = EventLoop(), WorkerClocks.start(2)
+    done = barrier_all_reduce(loop, clocks, [0.2, 0.1], 0.0)
+    assert done == pytest.approx(0.2)
+    assert loop.trace[-1][1] == "barrier"
+
+
+# --------------------------------------------------------------------------- #
+# cluster scenarios
+# --------------------------------------------------------------------------- #
+def test_same_seed_identical_trace():
+    """The determinism contract: same ClusterSpec seed => same event trace."""
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6,
+                       straggler_prob=0.3, jitter_sigma=0.2, seed=7)
+    r1 = run_quad(spec)
+    r2 = run_quad(spec)
+    assert r1.trace == r2.trace
+    assert r1.times == r2.times and r1.losses == r2.losses
+    r3 = run_quad(spec.with_(seed=8))
+    assert r3.trace != r1.trace
+
+
+def test_stragglers_stretch_the_critical_path():
+    base = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6, seed=0)
+    slow = base.with_(straggler_prob=1.0, straggler_slowdown=5.0)
+    r_base, r_slow = run_quad(base), run_quad(slow)
+    assert r_slow.compute_s == pytest.approx(5.0 * r_base.compute_s)
+    assert r_slow.comm_s == pytest.approx(r_base.comm_s)  # links unaffected
+    assert r_slow.sim_seconds > r_base.sim_seconds
+
+
+def test_heterogeneous_speeds_slow_worker_dominates():
+    base = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6, seed=0)
+    hetero = base.with_(rel_speeds=(1.0, 1.0, 1.0, 0.25))
+    r_base, r_het = run_quad(base), run_quad(hetero)
+    # the barrier waits for the 4x-slower worker every iteration
+    assert r_het.compute_s == pytest.approx(4.0 * r_base.compute_s)
+
+
+def test_failure_injection_restores_from_checkpoint(tmp_path):
+    # iteration duration here is ~2.6e-4 sim seconds (256-byte FO exchange
+    # at 1e6 B/s), so a rate of 1000/s yields a few failures over 10 iters
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6,
+                       fail_rate=1000.0, restart_time=0.01, ckpt_every=2,
+                       seed=3)
+    res = run_quad(spec, n_iters=10, ckpt_dir=str(tmp_path))
+    assert res.failures > 0
+    kinds = [k for _, k, _ in res.trace]
+    assert "fail" in kinds and "restore" in kinds
+    # committed trace stays monotone in simulated time
+    times = [t for t, _, _ in res.trace]
+    assert times == sorted(times)
+    # every iteration up to n_iters eventually committed despite rollbacks
+    assert res.steps[-1] == 9
+    # the failure-free run of the same method reaches the same final params
+    # (restore is a REAL repro.checkpoint round-trip, so state survives)
+    ref = run_quad(spec.with_(fail_rate=0.0, ckpt_every=0), n_iters=10)
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(ref.params)):
+        assert jnp.array_equal(a, b)
+
+
+def test_failure_restore_ignores_stale_checkpoints(tmp_path):
+    """A caller-supplied ckpt_dir may hold other runs' checkpoints; failure
+    recovery must restore the step THIS run saved, not the global latest."""
+    from repro.checkpoint import save as ckpt_save
+
+    params, _ = quad_problem()
+    ckpt_save(str(tmp_path), 99, {            # stale foreign checkpoint
+        "params": jax.tree.map(lambda x: x + 100.0, params),
+        "state": {"opt": (), "since_fo": 0}})
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6,
+                       fail_rate=1000.0, restart_time=0.01, ckpt_every=2,
+                       seed=3)
+    res = run_quad(spec, n_iters=10, ckpt_dir=str(tmp_path))
+    assert res.failures > 0
+    ref = run_quad(spec.with_(fail_rate=0.0, ckpt_every=0), n_iters=10)
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(ref.params)):
+        assert jnp.array_equal(a, b)
+
+
+def test_failed_iterations_are_rerun_not_skipped():
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6,
+                       fail_rate=5000.0, restart_time=0.01, ckpt_every=3,
+                       seed=5)
+    res = run_quad(spec, n_iters=8)
+    assert res.failures > 0
+    # rollbacks re-run lost iterations; every index still commits eventually
+    assert sorted(set(res.steps)) == list(range(8))
+    assert res.steps[-1] == 7
+
+
+# --------------------------------------------------------------------------- #
+# cost model cross-checks
+# --------------------------------------------------------------------------- #
+def test_compute_model_prices_fo_vs_zo():
+    cm = ComputeModel(fwd_flops=1e6, flops_per_sec=1e9, fwd_bwd_ratio=3.0)
+    assert cm.time(2.0, 0.0) == pytest.approx(2e-3)     # ZO: two fevals
+    assert cm.time(0.0, 1.0) == pytest.approx(3e-3)     # FO: fwd+bwd
+    assert cm.time(0.0, 1.0, speed=2.0) == pytest.approx(1.5e-3)
+
+
+def test_per_order_costs_match_method_analytics():
+    """The runner's per-order eval counts amortize to Method.fevals/gevals."""
+    from repro.core import HOSGDConfig, make_ho_sgd
+
+    tau = 4
+    meth = make_ho_sgd(quad_loss, HOSGDConfig(tau=tau, m=QUAD_M, lr=0.1))
+    costs = {1: StepCost(0.0, 1.0, 0), 0: StepCost(2.0, 0.0, 0)}
+    mix = {1: 1.0 / tau, 0: (tau - 1.0) / tau}
+    validate_against_method(meth, QUAD_D, costs, mix)
+
+
+def test_sim_bytes_come_from_the_ledger():
+    """HO iterations are priced at exactly the bytes their programs booked."""
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6, seed=0)
+    res = run_quad(spec, n_iters=8, tau=4)
+    # 2 FO steps book 4*d each; 6 ZO steps book 4*m each (m in-program)
+    assert res.bytes_total == 2 * 4 * QUAD_D + 6 * 4 * QUAD_M
+
+
+def test_zo_comm_independent_of_d_in_sim():
+    spec = ClusterSpec(m=QUAD_M, flops_per_sec=1e9, bandwidth=1e6, seed=0)
+    res = run_quad(spec, which="zo_sgd", n_iters=6)
+    assert all(o == 0 for o in res.orders)
+    assert res.bytes_total == 6 * 4 * QUAD_M
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance ordering (paper Table 1 on simulated wall-clock)
+# --------------------------------------------------------------------------- #
+def test_table1_ordering_on_simulated_wallclock():
+    """Bandwidth-constrained cluster: HO-SGD hits the target loss in fewer
+    simulated seconds than sync-SGD, and in fewer function-evaluation
+    seconds than ZO-only SGD."""
+    from repro.data.synthetic import batches, make_classification
+    from repro.models.mlp import init_mlp_classifier, mlp_loss
+
+    ds = make_classification("acoustic", n_train=2048, n_test=512, seed=0)
+    params = init_mlp_classifier(jax.random.key(0), ds.n_features,
+                                 ds.n_classes, hidden=32)
+    cluster = ClusterSpec(m=4, flops_per_sec=1e9, alpha=1e-5, bandwidth=1e5,
+                          seed=0)
+    compute = compute_model_for(params, cluster, 16)
+    eval_batch = {"x": ds.x_test, "y": ds.y_test}
+    eval_fn = jax.jit(lambda p: mlp_loss(p, eval_batch))
+    target = 0.75
+
+    sims = make_sim_methods(mlp_loss, params, cluster, tau=8, lr=0.05,
+                            zo_lr=0.002,
+                            which=["ho_sgd", "sync_sgd", "zo_sgd"])
+    out = {}
+    for name, sm in sims.items():
+        out[name] = simulate(sm, params, batches(ds, 64, seed=0), cluster,
+                             500, compute=compute, eval_fn=eval_fn,
+                             eval_every=1, target_loss=target)
+    t_ho = out["ho_sgd"].time_to_loss(target)
+    t_sync = out["sync_sgd"].time_to_loss(target)
+    fs_ho = out["ho_sgd"].feval_seconds_to_loss(target)
+    fs_zo = out["zo_sgd"].feval_seconds_to_loss(target)
+    assert math.isfinite(t_ho) and math.isfinite(t_sync)
+    assert t_ho < t_sync, f"HO {t_ho} !< sync {t_sync} (simulated seconds)"
+    assert math.isfinite(fs_zo)
+    assert fs_ho < fs_zo, f"HO {fs_ho} !< ZO {fs_zo} (feval seconds)"
+    # sync still wins on iteration count — the tradeoff, not a free lunch
+    assert len(out["sync_sgd"].steps) <= len(out["ho_sgd"].steps)
