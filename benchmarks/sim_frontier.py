@@ -1,19 +1,23 @@
 """Time-to-target-loss frontier on the simulated cluster (repro.sim).
 
-Sweeps tau, m, the FO codec, and straggler severity; every configuration
-replays the REAL step functions through the discrete-event cluster model
-and reports when (in simulated seconds) it reaches the target loss.  This
-is the paper's Table-1 tradeoff collapsed onto one axis — and the
-benchmark asserts the qualitative ordering on a bandwidth-constrained
-cluster:
+Sweeps tau, m, the FO codec, straggler severity, the link topology
+(flat/ring/tree all-reduce, 1 vs 2 pods) and the async staleness bound;
+every configuration replays the REAL step functions through the
+discrete-event cluster model and reports when (in simulated seconds) it
+reaches the target loss.  This is the paper's Table-1 tradeoff collapsed
+onto one axis — and the benchmark asserts the qualitative ordering on a
+bandwidth-constrained cluster:
 
   * HO-SGD reaches the target in fewer simulated seconds than sync-SGD
-    (the FO exchange amortized over tau), and
+    (the FO exchange amortized over tau) — on the base cluster AND under
+    a ring all-reduce AND a 2-pod hierarchical topology, and
   * in fewer function-evaluation-seconds than ZO-only SGD (the FO anchor
     steps do the heavy lifting).
 
 CSV rows: ``sim/<config>,us_per_call,t_to_target,feval_s_to_target,...``
-plus a BENCH json dump (``--out``) with the full per-config summaries.
+plus a BENCH json dump (``--out``, default ``BENCH_sim_frontier.json`` at
+the repo root so the bench harness picks it up) with the full per-config
+summaries.
 """
 from __future__ import annotations
 
@@ -27,7 +31,16 @@ import jax
 from repro.data.synthetic import batches, make_classification
 from repro.dist import get_compressor
 from repro.models.mlp import init_mlp_classifier, mlp_loss
-from repro.sim import bandwidth_constrained, compute_model_for, make_sim_methods, simulate
+from repro.sim import (
+    COLLECTIVE_KINDS,
+    Topology,
+    bandwidth_constrained,
+    compute_model_for,
+    make_sim_methods,
+    simulate,
+)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 FIELDS = ["t_to_target", "feval_s_to_target", "iters", "sim_seconds",
           "comm_s", "compute_s", "failures", "final_loss"]
@@ -67,8 +80,19 @@ def main(argv=None):
     ap.add_argument("--bandwidth", type=float, default=1e5)
     ap.add_argument("--alpha", type=float, default=1e-5)
     ap.add_argument("--flops", type=float, default=1e9)
+    ap.add_argument("--topology", default="flat",
+                    choices=list(COLLECTIVE_KINDS),
+                    help="all-reduce algorithm of the base cluster")
+    ap.add_argument("--pods", type=int, default=1,
+                    help=">1 makes the base cluster's reduce hierarchical")
+    ap.add_argument("--inter-alpha", type=float, default=1e-3)
+    ap.add_argument("--inter-bandwidth", type=float, default=None,
+                    help="inter-pod bytes/s (default: --bandwidth / 4)")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help="async staleness bound of the base cluster")
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--out", default="artifacts/sim/frontier.json")
+    ap.add_argument("--out",
+                    default=os.path.join(REPO_ROOT, "BENCH_sim_frontier.json"))
     args = ap.parse_args(argv)
 
     taus = [2, 8] if args.smoke else [2, 4, 8, 16]
@@ -84,9 +108,18 @@ def main(argv=None):
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
                                  ds.n_classes, hidden=args.hidden)
+    inter_bw = (args.inter_bandwidth if args.inter_bandwidth is not None
+                else args.bandwidth / 4)
+
+    def topo(pods):
+        return (Topology(pods=pods, inter_alpha=args.inter_alpha,
+                         inter_bandwidth=inter_bw) if pods > 1 else None)
+
     base = bandwidth_constrained(m=4, bandwidth=args.bandwidth,
                                  alpha=args.alpha, flops_per_sec=args.flops,
-                                 seed=args.seed)
+                                 seed=args.seed, collective=args.topology,
+                                 topology=topo(args.pods),
+                                 max_staleness=args.max_staleness)
     mk = dict(tau=args.tau, lr=args.lr, zo_lr=args.zo_lr, seed=args.seed)
     run = dict(iters=args.iters, batch=args.batch, target=args.target_loss,
                seed=args.seed)
@@ -94,44 +127,76 @@ def main(argv=None):
     rows = []
     print("name,us_per_call," + ",".join(FIELDS))
 
-    def emit(cfg_name, sm, cluster):
-        s = run_one(cfg_name, sm, params, ds, cluster, **run)
+    # several sweep axes pass through the same configuration (e.g. the base
+    # tau/m/codec/straggler point, or stale=0 when the base is already
+    # synchronous) — memoize full simulate runs on (method, cluster, tau,
+    # codec) so each distinct configuration is simulated exactly once
+    memo = {}
+
+    def emit(cfg_name, cluster, *, method="ho_sgd", tau=None, codec=None):
+        key = (method, cluster, tau if tau is not None else args.tau, codec)
+        s = memo.get(key)
+        if s is None:
+            sm = make_sim_methods(
+                mlp_loss, params, cluster,
+                **{**mk, "tau": key[2]},
+                codec=get_compressor(codec) if codec else None,
+                which=[method])[method]
+            s = memo[key] = run_one(cfg_name, sm, params, ds, cluster, **run)
+        s = dict(s, config=cfg_name)
         rows.append(s)
         print(f"sim/{cfg_name},0," + ",".join(fmt(s[k]) for k in FIELDS))
         return s
 
     # tau frontier (the paper's knob) on the bandwidth-constrained cluster
     for tau in taus:
-        sm = make_sim_methods(mlp_loss, params, base, **{**mk, "tau": tau},
-                              which=["ho_sgd"])["ho_sgd"]
-        emit(f"ho_sgd[tau={tau}]", sm, base)
+        emit(f"ho_sgd[tau={tau}]", base, tau=tau)
 
-    # worker-count frontier
+    # worker-count frontier (m values the pod count cannot split are
+    # skipped — a 2-worker cluster has no 4-pod hierarchy)
     for m in ms:
-        cl = base.with_(m=m)
-        sm = make_sim_methods(mlp_loss, params, cl, **mk,
-                              which=["ho_sgd"])["ho_sgd"]
-        emit(f"ho_sgd[m={m}]", sm, cl)
+        if m % max(1, args.pods):
+            print(f"# skip ho_sgd[m={m}]: {args.pods} pods do not divide m")
+            continue
+        emit(f"ho_sgd[m={m}]", base.with_(m=m))
 
     # FO-codec frontier (wire bytes straight from the ledger's booked codec)
     for codec in codecs:
-        sm = make_sim_methods(mlp_loss, params, base, **mk,
-                              codec=get_compressor(codec),
-                              which=["ho_sgd"])["ho_sgd"]
-        emit(f"ho_sgd[codec={codec}]", sm, base)
+        emit(f"ho_sgd[codec={codec}]", base,
+             codec=None if codec == "none" else codec)
 
     # straggler severity frontier
     for p in strags:
-        cl = base.with_(straggler_prob=p)
-        sm = make_sim_methods(mlp_loss, params, cl, **mk,
-                              which=["ho_sgd"])["ho_sgd"]
-        emit(f"ho_sgd[strag={p}]", sm, cl)
+        emit(f"ho_sgd[strag={p}]", base.with_(straggler_prob=p))
+
+    # topology frontier: HO vs sync under each all-reduce algorithm and a
+    # 2-pod hierarchical reduce — the Table-1 ordering must survive
+    # non-flat links (the regime where model-averaging baselines look
+    # artificially close on a flat switch)
+    topo_axes = ([("ring", 1), ("ring", 2)] if args.smoke
+                 else [("flat", 1), ("ring", 1), ("tree", 1), ("ring", 2),
+                       ("tree", 2)])
+    topo_ok = {}
+    for kind, pods in topo_axes:
+        cl = base.with_(collective=kind, topology=topo(pods))
+        tag = f"{kind}" + (f"+{pods}pod" if pods > 1 else "")
+        s_ho = emit(f"ho_sgd[topo={tag}]", cl)
+        s_sy = emit(f"sync_sgd[topo={tag}]", cl, method="sync_sgd")
+        topo_ok[tag] = s_ho["t_to_target"] < s_sy["t_to_target"]
+
+    # async staleness frontier (ZO rounds unbarriered; FO syncs barriered)
+    stales = [0, 2] if args.smoke else [0, 1, 2, 4]
+    for s in stales:
+        emit(f"ho_sgd[stale={s}]",
+             base.with_(max_staleness=s, straggler_prob=0.3))
+
+    # elastic membership: failures shrink W, rejoins restore via checkpoint
+    emit("ho_sgd[elastic]",
+         base.with_(elastic=True, fail_rate=2.0, downtime=0.5,
+                    restart_time=0.05))
 
     # the baselines at the base configuration
-    by_name = {}
-    sims = make_sim_methods(mlp_loss, params, base, **mk, which=singles)
-    for name, sm in sims.items():
-        by_name[name] = emit(name, sm, base)
+    by_name = {name: emit(name, base, method=name) for name in singles}
 
     # the acceptance ordering (paper Table 1, on simulated wall-clock)
     ho = next(r for r in rows if r["config"] == f"ho_sgd[tau={args.tau}]")
@@ -140,23 +205,32 @@ def main(argv=None):
              < by_name["zo_sgd"]["feval_s_to_target"])
     print(f"sim/ordering_ho_beats_sync_wallclock,0,{int(ok_sync)}")
     print(f"sim/ordering_ho_beats_zo_feval_seconds,0,{int(ok_zo)}")
+    for tag, ok in topo_ok.items():
+        print(f"sim/ordering_ho_beats_sync[{tag}],0,{int(ok)}")
 
     if args.out:
-        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        out_dir = os.path.dirname(args.out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
         with open(args.out, "w") as f:
             json.dump({
                 "bench": "sim_frontier",
                 "config": {k: v for k, v in vars(args).items()},
-                "orderings": {"ho_beats_sync_wallclock": bool(ok_sync),
-                              "ho_beats_zo_feval_seconds": bool(ok_zo)},
+                "orderings": {
+                    "ho_beats_sync_wallclock": bool(ok_sync),
+                    "ho_beats_zo_feval_seconds": bool(ok_zo),
+                    **{f"ho_beats_sync[{tag}]": bool(ok)
+                       for tag, ok in topo_ok.items()},
+                },
                 "rows": rows,
             }, f, indent=1)
         print(f"# wrote {args.out}")
 
-    if not (ok_sync and ok_zo):
+    if not (ok_sync and ok_zo and all(topo_ok.values())):
+        bad_topo = [tag for tag, ok in topo_ok.items() if not ok]
         raise SystemExit(
             f"qualitative ordering violated: ho<sync={ok_sync} "
-            f"ho<zo(feval_s)={ok_zo}")
+            f"ho<zo(feval_s)={ok_zo} topo_violations={bad_topo}")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,14 @@ from repro.data.synthetic import batches, make_classification
 from repro.dist import get_compressor
 from repro.metrics import CSVLogger
 from repro.models.mlp import init_mlp_classifier, mlp_loss
-from repro.sim import ClusterSpec, compute_model_for, make_sim_methods, simulate
+from repro.sim import (
+    COLLECTIVE_KINDS,
+    ClusterSpec,
+    Topology,
+    compute_model_for,
+    make_sim_methods,
+    simulate,
+)
 
 METHODS = ["ho_sgd", "ho_sgd_adaptive", "sync_sgd", "zo_sgd", "pa_sgd",
            "ri_sgd", "qsgd"]
@@ -53,6 +60,24 @@ def main(argv=None):
     ap.add_argument("--bandwidth", type=float, default=1e6, help="bytes/s")
     ap.add_argument("--alpha", type=float, default=1e-5,
                     help="per-collective latency (s)")
+    ap.add_argument("--collective", default="flat",
+                    choices=list(COLLECTIVE_KINDS),
+                    help="all-reduce algorithm (alpha-beta round structure)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help=">1 prices a hierarchical reduce: intra-pod "
+                         "--collective + inter-pod ring on the slow link")
+    ap.add_argument("--inter-alpha", type=float, default=1e-3,
+                    help="inter-pod latency per collective (s)")
+    ap.add_argument("--inter-bandwidth", type=float, default=1e8,
+                    help="inter-pod bytes/s")
+    ap.add_argument("--max-staleness", type=int, default=0,
+                    help=">0 runs ZO rounds unbarriered, each worker at "
+                         "most this many rounds ahead (FO syncs barrier)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="failures shrink the membership (no rollback); "
+                         "workers rejoin via a checkpoint round-trip")
+    ap.add_argument("--downtime", type=float, default=60.0,
+                    help="mean elastic rejoin delay (s, exponential)")
     ap.add_argument("--straggler-prob", type=float, default=0.0)
     ap.add_argument("--straggler-slowdown", type=float, default=4.0)
     ap.add_argument("--jitter", type=float, default=0.0,
@@ -70,11 +95,16 @@ def main(argv=None):
     ap.add_argument("--json", default=None, help="summary JSON path")
     args = ap.parse_args(argv)
 
+    topo = (Topology(pods=args.pods, inter_alpha=args.inter_alpha,
+                     inter_bandwidth=args.inter_bandwidth)
+            if args.pods > 1 else None)
     cluster = ClusterSpec(
         m=args.m, flops_per_sec=args.flops, alpha=args.alpha,
-        bandwidth=args.bandwidth, straggler_prob=args.straggler_prob,
+        bandwidth=args.bandwidth, collective=args.collective, topology=topo,
+        max_staleness=args.max_staleness, straggler_prob=args.straggler_prob,
         straggler_slowdown=args.straggler_slowdown, jitter_sigma=args.jitter,
-        fail_rate=args.fail_rate, restart_time=args.restart_time,
+        fail_rate=args.fail_rate, elastic=args.elastic,
+        downtime=args.downtime, restart_time=args.restart_time,
         ckpt_every=args.ckpt_every, seed=args.seed)
 
     ds = make_classification(args.dataset, seed=args.seed)
@@ -95,7 +125,9 @@ def main(argv=None):
 
     print(f"sim: dataset={args.dataset} d={d:,} m={cluster.m} "
           f"bandwidth={cluster.bandwidth:.3g}B/s alpha={cluster.alpha:.3g}s "
-          f"flops={cluster.flops_per_sec:.3g}/s seed={cluster.seed}")
+          f"flops={cluster.flops_per_sec:.3g}/s seed={cluster.seed} "
+          f"collective={cluster.collective} pods={args.pods} "
+          f"staleness={cluster.max_staleness} elastic={cluster.elastic}")
     summaries = {}
     with CSVLogger(args.log, ["method", "iter", "order", "loss", "t_sim",
                               "comm_bytes"]) as logger:

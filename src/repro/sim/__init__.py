@@ -8,24 +8,41 @@ the way ``repro.dist`` owns sharding and ``DirectionEngine`` owns ZO
 algebra.
 
   * ``events``  — deterministic event loop, per-worker clocks, the
-    barriered all-reduce primitive.
+    barriered all-reduce primitive and its bounded-staleness async twin.
   * ``costs``   — pluggable hardware cost models (FLOP-based compute,
-    alpha–beta links); byte counts always come from the ``CommLedger`` /
-    ``dist.compress`` wire estimates, never re-derived.
+    alpha–beta links, ``CollectiveModel`` pricing flat/ring/tree and
+    hierarchical multi-pod all-reduces); byte counts always come from the
+    ``CommLedger`` / ``dist.compress`` wire estimates, never re-derived.
   * ``cluster`` — ``ClusterSpec``: heterogeneous speeds, seeded straggler
-    distributions, Poisson failures charged a real checkpoint-restore.
+    distributions, Poisson failures charged a real checkpoint-restore,
+    ``Topology`` (pods × workers-per-pod), ``max_staleness`` async and
+    ``elastic`` leave/rejoin membership.
   * ``runner``  — replays the real step functions from ``core`` /
     ``core.baselines`` and emits loss-vs-simulated-seconds traces.
 """
-from repro.sim.cluster import ClusterSpec, bandwidth_constrained  # noqa: F401
+from repro.sim.cluster import (  # noqa: F401
+    ClusterSpec,
+    Topology,
+    bandwidth_constrained,
+)
 from repro.sim.costs import (  # noqa: F401
+    COLLECTIVE_KINDS,
+    CollectiveModel,
     ComputeModel,
     LinkModel,
     StepCost,
     config_fwd_flops,
+    flat_all_reduce_time,
+    ring_all_reduce_time,
+    tree_all_reduce_time,
     tree_fwd_flops,
 )
-from repro.sim.events import EventLoop, WorkerClocks, barrier_all_reduce  # noqa: F401
+from repro.sim.events import (  # noqa: F401
+    EventLoop,
+    WorkerClocks,
+    async_all_reduce,
+    barrier_all_reduce,
+)
 from repro.sim.runner import (  # noqa: F401
     SimMethod,
     SimResult,

@@ -10,11 +10,42 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, replace
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.sim.costs import LinkModel
+from repro.sim.costs import COLLECTIVE_KINDS, CollectiveModel, LinkModel
+
+
+@dataclass(frozen=True)
+class Topology:
+    """Multi-pod link topology: ``pods`` × workers-per-pod, mirroring the
+    ``("pod", "data")`` mesh axes ``repro.dist.sharding`` owns.
+
+    Workers inside a pod talk over the ``ClusterSpec``'s (fast) link; pods
+    talk over this (slow) inter-pod link.  A hierarchical all-reduce is
+    priced as the selected intra-pod algorithm over ``m / pods`` workers
+    plus an inter-pod ring exchange over ``pods`` (see
+    ``costs.CollectiveModel``).
+    """
+
+    pods: int = 1
+    inter_alpha: float = 1e-3            # inter-pod latency per collective (s)
+    inter_bandwidth: float = 1e8         # inter-pod bytes/s per worker
+
+    def __post_init__(self):
+        assert self.pods >= 1
+        assert self.inter_bandwidth > 0 and self.inter_alpha >= 0
+
+    @property
+    def inter_link(self) -> LinkModel:
+        return LinkModel(alpha=self.inter_alpha,
+                         beta=1.0 / self.inter_bandwidth)
+
+    def workers_per_pod(self, m: int) -> int:
+        assert m % self.pods == 0, \
+            f"m={m} does not divide into {self.pods} pods"
+        return m // self.pods
 
 
 @dataclass(frozen=True)
@@ -29,10 +60,27 @@ class ClusterSpec:
     lognormal multiplicative noise on top.
 
     Failures: a Poisson process at ``fail_rate`` failures per simulated
-    second (cluster-wide).  A failure kills the in-flight iteration; the
-    cluster restores the last checkpoint written every ``ckpt_every``
-    iterations (a REAL ``repro.checkpoint`` round-trip in the runner) and
-    pays ``restart_time`` simulated seconds before resuming.
+    second (cluster-wide).  In the default (bulk-synchronous) mode a
+    failure kills the in-flight iteration; the cluster restores the last
+    checkpoint written every ``ckpt_every`` iterations (a REAL
+    ``repro.checkpoint`` round-trip in the runner) and pays
+    ``restart_time`` simulated seconds before resuming.  With
+    ``elastic=True`` a failure instead REMOVES the victim from the
+    membership (no rollback): the survivors keep iterating with the
+    collective priced at the shrunken ``W``, and the victim rejoins after
+    a seeded exponential downtime (mean ``downtime`` seconds) through a
+    real checkpoint round-trip, growing ``W`` back.
+
+    Execution: ``max_staleness = 0`` is bulk-synchronous (every iteration
+    barriers).  ``max_staleness = s > 0`` lets workers run ZO iterations
+    WITHOUT the barrier, each at most ``s`` rounds ahead of the slowest
+    worker's committed round; FO sync rounds always barrier, matching
+    HO-SGD's semantics (the tau-th exchange is the consistency point).
+
+    Links: ``collective`` picks the all-reduce algorithm (``flat`` —
+    PR 3's switched exchange — ``ring`` or ``tree``); a ``topology`` with
+    ``pods > 1`` makes the reduce hierarchical (intra-pod ``collective``
+    + inter-pod ring on the topology's slow link).
     """
 
     m: int = 4
@@ -40,10 +88,15 @@ class ClusterSpec:
     rel_speeds: Tuple[float, ...] = ()
     alpha: float = 1e-4                  # link latency per collective (s)
     bandwidth: float = 1e9               # bytes/s per worker
+    collective: str = "flat"             # all-reduce algorithm (costs.py)
+    topology: Optional[Topology] = None  # multi-pod links (None = one pod)
+    max_staleness: int = 0               # 0 = bulk-synchronous ZO rounds
     straggler_prob: float = 0.0
     straggler_slowdown: float = 4.0
     jitter_sigma: float = 0.0
     fail_rate: float = 0.0               # failures per simulated second
+    elastic: bool = False                # failures shrink W instead of rollback
+    downtime: float = 60.0               # mean elastic rejoin delay (s)
     restart_time: float = 30.0           # checkpoint-restore charge (s)
     ckpt_every: int = 0                  # iterations between sim checkpoints
     seed: int = 0
@@ -51,11 +104,19 @@ class ClusterSpec:
     def __post_init__(self):
         assert self.m >= 1
         assert self.bandwidth > 0 and self.flops_per_sec > 0
+        assert self.collective in COLLECTIVE_KINDS, \
+            f"unknown collective {self.collective!r}; have {COLLECTIVE_KINDS}"
+        assert self.max_staleness >= 0
+        assert self.downtime > 0
+        if self.topology is not None:
+            self.topology.workers_per_pod(self.m)   # divisibility guard
         if self.rel_speeds:
             assert len(self.rel_speeds) == self.m, \
                 f"{len(self.rel_speeds)} rel_speeds for m={self.m}"
             assert all(s > 0 for s in self.rel_speeds)
-        if self.fail_rate > 0:
+        if self.elastic:
+            assert self.m >= 2, "elastic membership needs m >= 2"
+        if self.fail_rate > 0 and not self.elastic:
             assert self.ckpt_every > 0, \
                 "failure injection needs ckpt_every > 0 (restore source)"
 
@@ -63,6 +124,20 @@ class ClusterSpec:
     @property
     def link(self) -> LinkModel:
         return LinkModel(alpha=self.alpha, beta=1.0 / self.bandwidth)
+
+    @property
+    def collective_model(self) -> CollectiveModel:
+        topo = self.topology
+        return CollectiveModel(
+            link=self.link, kind=self.collective,
+            pods=topo.pods if topo is not None else 1,
+            inter_link=topo.inter_link if topo is not None else None)
+
+    def collective_time(self, nbytes: float, w: Optional[int] = None) -> float:
+        """Time of one all-reduce of ``nbytes`` over ``w`` workers (defaults
+        to the full membership ``m``; elastic runs pass the live count)."""
+        return self.collective_model.all_reduce_time(
+            nbytes, self.m if w is None else w)
 
     def speeds(self) -> Tuple[float, ...]:
         return self.rel_speeds if self.rel_speeds else (1.0,) * self.m
@@ -93,15 +168,23 @@ class ClusterSpec:
             return math.inf
         return float(rng.exponential(1.0 / self.fail_rate))
 
+    def draw_downtime(self, rng: np.random.Generator) -> float:
+        """Seconds an elastically-failed worker stays out of the membership
+        (seeded exponential with mean ``downtime``)."""
+        return float(rng.exponential(self.downtime))
+
 
 def bandwidth_constrained(m: int = 4, *, seed: int = 0,
                           bandwidth: float = 1e5,
                           alpha: float = 1e-5,
-                          flops_per_sec: float = 1e9) -> ClusterSpec:
+                          flops_per_sec: float = 1e9,
+                          **kw) -> ClusterSpec:
     """The paper's target regime: links are the bottleneck, compute is not.
 
     A d-dim fp32 all-reduce costs ``4*d/bandwidth`` — orders of magnitude
     above both the per-collective latency and a function evaluation — which
-    is exactly when amortizing FO exchanges over tau ZO iterations pays."""
+    is exactly when amortizing FO exchanges over tau ZO iterations pays.
+    Extra ``kw`` pass through to ``ClusterSpec`` (collective, topology,
+    max_staleness, elastic, ...)."""
     return ClusterSpec(m=m, flops_per_sec=flops_per_sec, alpha=alpha,
-                       bandwidth=bandwidth, seed=seed)
+                       bandwidth=bandwidth, seed=seed, **kw)

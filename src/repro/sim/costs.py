@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Optional
 
 
 @dataclass(frozen=True)
@@ -35,6 +35,82 @@ class LinkModel:
         if nbytes <= 0:
             return 0.0
         return self.alpha + float(nbytes) * self.beta
+
+
+#: recognized all-reduce algorithms (``CollectiveModel.kind``)
+COLLECTIVE_KINDS = ("flat", "ring", "tree")
+
+
+def ring_all_reduce_time(link: LinkModel, nbytes: float, w: int) -> float:
+    """Ring all-reduce over ``w`` workers: reduce-scatter + all-gather,
+    ``2(w-1)`` rounds each moving ``nbytes / w``:
+    ``2(w-1)·alpha + 2(w-1)/w · nbytes·beta``."""
+    if nbytes <= 0 or w <= 1:
+        return 0.0
+    return 2.0 * (w - 1) * link.alpha + (2.0 * (w - 1) / w) * float(nbytes) * link.beta
+
+
+def tree_all_reduce_time(link: LinkModel, nbytes: float, w: int) -> float:
+    """Binary-tree all-reduce: ``ceil(log2(w))`` reduce rounds up the tree
+    plus the same number of broadcast rounds down, each moving the full
+    buffer: ``2·log2(w) · (alpha + nbytes·beta)``."""
+    if nbytes <= 0 or w <= 1:
+        return 0.0
+    rounds = 2.0 * math.ceil(math.log2(w))
+    return rounds * (link.alpha + float(nbytes) * link.beta)
+
+
+def flat_all_reduce_time(link: LinkModel, nbytes: float, w: int) -> float:
+    """The PR-3 model: one fully-switched exchange, latency and wire time
+    independent of ``w`` (every worker receives ``nbytes`` at once)."""
+    if w <= 1:
+        return 0.0
+    return link.time(nbytes)
+
+
+_ALGOS = {"flat": flat_all_reduce_time, "ring": ring_all_reduce_time,
+          "tree": tree_all_reduce_time}
+
+
+@dataclass(frozen=True)
+class CollectiveModel:
+    """Prices one all-reduce of ``nbytes`` (per worker, the ``CommLedger``
+    receive convention) over ``w`` participating workers.
+
+    ``kind`` selects the single-link algorithm (``flat`` — PR 3's switched
+    exchange; ``ring``; ``tree``).  With ``pods > 1`` the reduce is
+    hierarchical: the ``kind`` algorithm runs intra-pod over
+    ``ceil(w / pods)`` workers on ``link``, then a ring exchange runs
+    inter-pod over ``pods`` on ``inter_link`` (the Topology's slow link).
+    ``w`` is the CURRENT membership — elastic clusters shrink/grow it and
+    the round structure reprices accordingly, while byte counts stay
+    whatever the replayed programs booked.
+    """
+
+    link: LinkModel
+    kind: str = "flat"
+    pods: int = 1
+    inter_link: Optional[LinkModel] = None
+
+    def __post_init__(self):
+        assert self.kind in COLLECTIVE_KINDS, \
+            f"unknown collective {self.kind!r}; have {COLLECTIVE_KINDS}"
+        assert self.pods >= 1
+        if self.pods > 1:
+            assert self.inter_link is not None, \
+                "multi-pod collectives need an inter-pod LinkModel"
+
+    def all_reduce_time(self, nbytes: float, w: int) -> float:
+        if nbytes <= 0 or w <= 1:
+            return 0.0
+        algo = _ALGOS[self.kind]
+        if self.pods <= 1:
+            return algo(self.link, nbytes, w)
+        wpp = max(1, math.ceil(w / self.pods))
+        intra = algo(self.link, nbytes, wpp)
+        inter = ring_all_reduce_time(self.inter_link, nbytes,
+                                     min(self.pods, w))
+        return intra + inter
 
 
 @dataclass(frozen=True)

@@ -2,17 +2,23 @@
 event trace.
 
 The simulator's determinism guarantee (README §repro.sim) rests entirely on
-this module: events are ordered by ``(time, seq)`` where ``seq`` is the
-scheduling order, so ties break FIFO and two runs that schedule the same
-events in the same order pop them — and record them — identically.  Nothing
-here reads wall clocks or global RNG state; all randomness enters through
-the seeded draws in ``repro.sim.cluster``.
+this module: the two collectives (``barrier_all_reduce`` and its
+bounded-staleness twin ``async_all_reduce``) commit each round's per-worker
+completions in sorted ``(time, worker)`` order — a pure function of clocks
+and compute durations, with worker index as the tie-break — so two runs
+with the same inputs record identical traces.  (``EventLoop`` also keeps a
+``(time, seq)``-ordered heap with FIFO tie-break for callers that schedule
+genuinely future events; the collectives commit directly via ``record``
+because a fast worker's unbarriered round may legitimately start before a
+slower worker's already-committed event.)  Nothing here reads wall clocks
+or global RNG state; all randomness enters through the seeded draws in
+``repro.sim.cluster``.
 """
 from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import List, NamedTuple, Sequence, Tuple
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 
 class Event(NamedTuple):
@@ -78,14 +84,25 @@ class WorkerClocks:
         self.t[worker] += dt
         return self.t[worker]
 
-    def barrier(self) -> float:
-        """Synchronize: every clock jumps to the latest — returns that time."""
-        sync = max(self.t)
-        self.t = [sync] * self.m
+    def barrier(self, active: Optional[Sequence[int]] = None) -> float:
+        """Synchronize: every (active) clock jumps to the latest of them —
+        returns that time.  Inactive workers (elastic leavers) keep their
+        clocks and do not gate the barrier."""
+        if active is None:
+            sync = max(self.t)
+            self.t = [sync] * self.m
+            return sync
+        sync = max(self.t[i] for i in active)
+        for i in active:
+            self.t[i] = sync
         return sync
 
-    def set_all(self, at: float) -> None:
-        self.t = [float(at)] * self.m
+    def set_all(self, at: float, active: Optional[Sequence[int]] = None) -> None:
+        if active is None:
+            self.t = [float(at)] * self.m
+        else:
+            for i in active:
+                self.t[i] = float(at)
 
 
 def barrier_all_reduce(
@@ -95,24 +112,68 @@ def barrier_all_reduce(
     comm_time: float,
     *,
     kind: str = "all_reduce",
+    active: Optional[Sequence[int]] = None,
 ) -> float:
-    """The simulator's one collective: per-worker compute, barrier, exchange.
+    """The bulk-synchronous collective: per-worker compute, barrier, exchange.
 
-    Schedules a ``compute`` completion per worker, drains them through the
-    heap (so the trace interleaves workers in global time order), barriers,
-    then charges ``comm_time`` once — the bulk-synchronous model every
-    method in ``repro.core`` follows.  Returns the completion time, with
-    every worker clock advanced to it.  ``comm_time == 0`` records a plain
-    ``barrier`` event (an iteration with no exchange, e.g. PA-SGD between
-    averaging rounds).
+    Commits a ``compute`` completion per (active) worker in (time, worker)
+    order — identical to draining the loop's heap, whose FIFO tiebreak is
+    the worker-ascending scheduling order, but additionally valid when a
+    fast worker's round starts before an already-committed event of a
+    slower worker (the first barriered FO sync after a run of unbarriered
+    async rounds) — barriers, then charges ``comm_time`` once: the model
+    every method in ``repro.core`` follows.  Returns the completion time,
+    with every participating clock advanced to it.  ``comm_time == 0``
+    records a plain ``barrier`` event (an iteration with no exchange, e.g.
+    PA-SGD between averaging rounds).  ``active`` (elastic membership)
+    restricts participation: left workers neither compute nor gate the
+    barrier.
     """
     assert len(compute_dts) == clocks.m
-    for i, dt in enumerate(compute_dts):
-        loop.schedule(clocks.t[i] + dt, "compute", i)
-    for _ in range(clocks.m):
-        ev = loop.pop()
-        clocks.t[ev.worker] = ev.time
-    done = clocks.barrier() + (comm_time if comm_time > 0 else 0.0)
+    workers = range(clocks.m) if active is None else active
+    for t_done, i in sorted((clocks.t[i] + compute_dts[i], i)
+                            for i in workers):
+        loop.record(t_done, "compute", i)
+        clocks.t[i] = t_done
+    done = clocks.barrier(active) + (comm_time if comm_time > 0 else 0.0)
     loop.record(done, kind if comm_time > 0 else "barrier")
-    clocks.set_all(done)
+    clocks.set_all(done, active)
+    return done
+
+
+def async_all_reduce(
+    loop: EventLoop,
+    clocks: WorkerClocks,
+    compute_dts: Sequence[float],
+    comm_time: float,
+    gate: float,
+    *,
+    kind: str = "async_exchange",
+    active: Optional[Sequence[int]] = None,
+) -> float:
+    """Bounded-staleness round: compute + exchange WITHOUT a barrier.
+
+    Each (active) worker starts at ``max(own clock, gate)`` — ``gate`` is
+    the commit time of the round ``max_staleness + 1`` back, which is how
+    the runner enforces that no worker runs more than ``max_staleness``
+    rounds ahead of the slowest — computes for its own ``dt``, then pays
+    ``comm_time`` for its own unbarriered exchange.  Clocks diverge; fast
+    workers pull ahead.
+
+    Completions are committed with ``loop.record`` in (time, worker) order
+    *within the round*; across rounds a fast worker's completion may carry
+    an earlier timestamp than an already-committed slow-worker event — the
+    trace is a deterministic function of the inputs either way, which is
+    all the determinism contract pins.  Returns the round's commit time
+    (the latest participating clock, recorded as one ``kind`` event).
+    """
+    assert len(compute_dts) == clocks.m
+    workers = list(range(clocks.m)) if active is None else list(active)
+    finishes = sorted((max(clocks.t[i], gate) + compute_dts[i], i)
+                      for i in workers)
+    for t_done, i in finishes:
+        loop.record(t_done, "compute", i)
+        clocks.t[i] = t_done + (comm_time if comm_time > 0 else 0.0)
+    done = max(clocks.t[i] for i in workers)
+    loop.record(done, kind)
     return done

@@ -48,7 +48,12 @@ from repro.launch.mesh import make_test_mesh
 from repro.opt.optimizers import Optimizer, const_schedule, sgd
 from repro.sim.cluster import ClusterSpec
 from repro.sim.costs import ComputeModel, StepCost, tree_fwd_flops
-from repro.sim.events import EventLoop, WorkerClocks, barrier_all_reduce
+from repro.sim.events import (
+    EventLoop,
+    WorkerClocks,
+    async_all_reduce,
+    barrier_all_reduce,
+)
 
 
 @dataclass
@@ -77,6 +82,7 @@ class SimResult:
     losses: List[float] = field(default_factory=list)   # training-batch loss
     orders: List[int] = field(default_factory=list)
     comm_bytes: List[int] = field(default_factory=list)  # wire bytes/worker
+    active_counts: List[int] = field(default_factory=list)  # live W/iteration
     feval_cum: List[float] = field(default_factory=list)
     evals: List[Tuple[float, float, float]] = field(default_factory=list)
     #: committed (time, kind, worker) entries — the determinism contract
@@ -87,7 +93,9 @@ class SimResult:
     geval_s: float = 0.0        # compute seconds spent on gradient evals
     bytes_total: int = 0        # per-worker wire bytes, summed over iters
     failures: int = 0
+    rejoins: int = 0            # elastic membership re-entries
     params: Any = None
+    state: Any = None           # final method state (opt + counters)
 
     @property
     def sim_seconds(self) -> float:
@@ -123,6 +131,7 @@ class SimResult:
             "geval_s": self.geval_s,
             "bytes_per_worker": self.bytes_total,
             "failures": self.failures,
+            "rejoins": self.rejoins,
             "final_loss": self.losses[-1] if self.losses else math.nan,
         }
 
@@ -158,13 +167,23 @@ def simulate(
 
     Determinism: same ``cluster`` (seed included), same method and data ⇒
     bit-identical ``SimResult.trace``.  All randomness flows from
-    ``cluster.rng()`` in a fixed draw order; simulated time never reads a
-    wall clock.
+    ``cluster.rng()`` in a fixed draw order (slowdowns are drawn for all
+    ``m`` workers even when some have elastically left, so membership
+    changes never shift later draws); simulated time never reads a wall
+    clock.
+
+    Async (``cluster.max_staleness > 0``): ZO iterations run unbarriered —
+    each worker starts a round as soon as it finished its previous one AND
+    the round ``max_staleness + 1`` back has committed cluster-wide; FO
+    sync rounds always barrier (HO-SGD's consistency point).  Elastic
+    (``cluster.elastic``): a failure removes the victim from the membership
+    with NO rollback; the survivors' collectives reprice at the live ``W``
+    and the victim rejoins after a seeded downtime through a real
+    ``repro.checkpoint`` round-trip of the current ``{params, state}``.
     """
     loop = EventLoop()
     clocks = WorkerClocks.start(cluster.m)
     rng = cluster.rng()
-    link = cluster.link
     state = sm.init(params)
     res = SimResult(name=sm.name)
     it = iter(batches)
@@ -174,32 +193,101 @@ def simulate(
     tmp = None
     use_ckpt = cluster.ckpt_every > 0
     last_ckpt = 0       # the step THIS run last saved (a caller-supplied
-    if use_ckpt:        # ckpt_dir may hold stale checkpoints from other runs)
-        if ckpt_dir is None:
+    if use_ckpt or cluster.elastic:   # ckpt_dir may hold stale checkpoints
+        if ckpt_dir is None:          # from other runs
             tmp = tempfile.mkdtemp(prefix="repro_sim_ckpt_")
             ckpt_dir = tmp
-        ckpt_save(ckpt_dir, 0, {"params": params, "state": state})
+        if use_ckpt:
+            ckpt_save(ckpt_dir, 0, {"params": params, "state": state})
     next_fail = cluster.draw_failure_gap(rng)
+
+    stale = cluster.max_staleness
+    active = list(range(cluster.m))   # live membership, ascending order
+    rejoin_at: Dict[int, float] = {}  # left worker -> rejoin time
+    pending = None   # the in-flight (batch consumed) step, kept across
+                     # elastic repricing passes so a failure never skips a
+                     # batch — membership changes the PRICE of iteration t,
+                     # never its math
 
     t = 0
     try:
         while t < n_iters:
-            batch = next(it)
-            new_params, new_state, metrics = sm.step(t, params, state, batch,
-                                                     key)
-            order = int(metrics["order"])
-            sc = sm.costs_for(t, order)
-            # price the iteration (host floats only; fixed draw order)
+            # elastic rejoins whose downtime has elapsed re-enter here (in
+            # worker order), through a REAL checkpoint round-trip of the
+            # cluster's current state
+            if rejoin_at:
+                for w in sorted(rejoin_at):
+                    back = rejoin_at[w]
+                    if back > loop.now:
+                        continue
+                    del rejoin_at[w]
+                    ckpt_save(ckpt_dir, t, {"params": params, "state": state})
+                    restored, _ = ckpt_restore(
+                        ckpt_dir, {"params": params, "state": state}, step=t)
+                    params, state = restored["params"], restored["state"]
+                    resume = back + cluster.restart_time
+                    loop.record(back, "rejoin", w)
+                    loop.record(resume, "restore", w)
+                    clocks.t[w] = resume
+                    active = sorted(active + [w])
+                    res.rejoins += 1
+
+            if pending is None:
+                batch = next(it)
+                new_params, new_state, metrics = sm.step(t, params, state,
+                                                         batch, key)
+                order = int(metrics["order"])
+                sc = sm.costs_for(t, order)
+                pending = (new_params, new_state, metrics, order, sc)
+            else:
+                new_params, new_state, metrics, order, sc = pending
+            # price the iteration (host floats only; fixed draw order —
+            # slowdowns always drawn for all m workers)
             slow = cluster.draw_slowdowns(rng)
             base_dt = compute.time(sc.fevals, sc.gevals)
             dts = [base_dt * float(s) for s in slow]
-            comm_time = link.time(sc.comm_bytes)
-            done_tent = max(c + dt for c, dt in zip(clocks.t, dts)) + comm_time
+            comm_time = cluster.collective_time(sc.comm_bytes, len(active))
+            is_async = stale > 0 and order == 0
+            if is_async:
+                idx = len(res.times) - 1 - stale
+                gate = res.times[idx] if idx >= 0 else 0.0
+                done_tent = max(max(clocks.t[i], gate) + dts[i]
+                                for i in active) + comm_time
+            else:
+                gate = 0.0
+                done_tent = max(clocks.t[i] + dts[i]
+                                for i in active) + comm_time
 
             if next_fail < done_tent:
-                # the failure lands inside this iteration: its work is lost,
-                # the cluster restores the last checkpoint (a real
-                # repro.checkpoint round-trip) and pays the restart charge
+                if cluster.elastic:
+                    # the victim leaves; survivors continue with NO rollback
+                    # (the in-flight step result is kept and repriced at the
+                    # shrunken membership on the next pass).  A failure with
+                    # one live worker left has nothing to remove and is not
+                    # counted — the failures counter matches leave events.
+                    victim = active[int(rng.integers(len(active)))]
+                    down = cluster.draw_downtime(rng)
+                    if len(active) > 1:
+                        loop.record(next_fail, "leave", victim)
+                        active = [i for i in active if i != victim]
+                        rejoin_at[victim] = next_fail + down
+                        # causality: the survivors only learn of the failure
+                        # at next_fail (they were waiting on the victim's
+                        # barrier slot / exchange), so the repriced round
+                        # cannot start — let alone commit — before it
+                        for i in active:
+                            clocks.t[i] = max(clocks.t[i], next_fail)
+                        res.failures += 1
+                        if res.failures >= max_failures:
+                            break
+                    next_fail = next_fail + cluster.draw_failure_gap(rng)
+                    continue
+                # bulk-synchronous mode: the failure lands inside this
+                # iteration, its work is lost; the cluster restores the last
+                # checkpoint (a real repro.checkpoint round-trip) and pays
+                # the restart charge
+                res.failures += 1
+                pending = None      # rollback: t changes, the step is stale
                 victim = int(rng.integers(cluster.m))
                 loop.record(next_fail, "fail", victim)
                 restored, rstep = ckpt_restore(
@@ -210,16 +298,21 @@ def simulate(
                 resume = next_fail + cluster.restart_time
                 loop.record(resume, "restore")
                 clocks.set_all(resume)
-                res.failures += 1
                 if res.failures >= max_failures:
                     break
                 next_fail = resume + cluster.draw_failure_gap(rng)
                 continue
 
             # commit: drain per-worker compute through the event loop, then
-            # the barriered exchange
-            done = barrier_all_reduce(loop, clocks, dts, comm_time)
-            dt_crit = max(dts)
+            # the exchange — barriered (FO sync / bulk-synchronous mode) or
+            # staleness-gated (async ZO rounds)
+            if is_async:
+                done = async_all_reduce(loop, clocks, dts, comm_time, gate,
+                                        active=active)
+            else:
+                done = barrier_all_reduce(loop, clocks, dts, comm_time,
+                                          active=active)
+            dt_crit = max(dts[i] for i in active)
             res.compute_s += dt_crit
             res.comm_s += comm_time
             if order == 0:
@@ -228,11 +321,13 @@ def simulate(
                 res.geval_s += dt_crit
             res.bytes_total += sc.comm_bytes
             params, state = new_params, new_state
+            pending = None
             res.steps.append(t)
             res.times.append(done)
             res.losses.append(float(metrics["loss"]))
             res.orders.append(order)
             res.comm_bytes.append(sc.comm_bytes)
+            res.active_counts.append(len(active))
             res.feval_cum.append(res.feval_s)
             t += 1
 
@@ -252,6 +347,7 @@ def simulate(
             shutil.rmtree(tmp, ignore_errors=True)
     res.trace = list(loop.trace)
     res.params = params
+    res.state = state
     return res
 
 

@@ -144,6 +144,60 @@ def test_checkpoint_method_state_roundtrip_adaptive(tmp_path):
     assert int(live_s["since_fo"]) == int(rest_s["since_fo"])
 
 
+def test_elastic_rejoin_checkpoint_roundtrip_bit_exact(tmp_path):
+    """Elastic cluster: a worker fails mid-tau-window (during the ZO
+    iterations between FO syncs), rejoins through a REAL repro.checkpoint
+    round-trip, and the continued run matches a never-failed run's params
+    AND method state bit-for-bit at the next FO sync — a lossy round-trip
+    (dtype width, python-scalar counters) would show up as divergence."""
+    import jax.numpy as jnp
+    from repro.sim import ClusterSpec, compute_model_for, make_sim_methods, \
+        simulate
+
+    def quad(params, batch):
+        return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+    params = {"x": jnp.zeros((32,), jnp.float32)}
+    batch = {"t": jnp.ones((8, 32), jnp.float32)}
+
+    def batches():
+        while True:
+            yield batch
+
+    def run(spec, n):
+        sm = make_sim_methods(quad, params, spec, tau=4, lr=0.1, zo_lr=0.05,
+                              which=["ho_sgd"])["ho_sgd"]
+        return simulate(sm, params, batches(), spec, n,
+                        compute=compute_model_for(params, spec, 2),
+                        ckpt_dir=str(tmp_path))
+
+    # seed 1 is pinned: exactly one worker leaves during ZO iteration t=1
+    # (mid-tau-window for tau=4: FO at t=0, next FO sync at t=4) and
+    # rejoins before that sync
+    spec = ClusterSpec(m=4, flops_per_sec=1e9, bandwidth=1e6, seed=1,
+                       elastic=True, fail_rate=4000.0, downtime=1e-4,
+                       restart_time=1e-5)
+    n = 5                                     # last committed step: FO @ t=4
+    res = run(spec, n)
+    assert res.failures == 1 and res.rejoins == 1
+    assert res.orders[4] == 1                 # the next FO sync committed
+    assert min(res.active_counts[1:4]) < 4    # W shrank inside the window
+    assert res.active_counts[4] == 4          # ...and regrew by the sync
+    kinds = [k for _, k, _ in res.trace]
+    assert "leave" in kinds and "rejoin" in kinds and "restore" in kinds
+
+    ref = run(spec.with_(fail_rate=0.0, elastic=False), n)
+    assert ref.failures == 0
+    for a, b in zip(jax.tree.leaves(res.params), jax.tree.leaves(ref.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert jnp.asarray(a).dtype == jnp.asarray(b).dtype
+    # method state too: optimizer tree and the since-FO schedule counter
+    assert int(res.state["since_fo"]) == int(ref.state["since_fo"])
+    for a, b in zip(jax.tree.leaves(res.state["opt"]),
+                    jax.tree.leaves(ref.state["opt"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_checkpoint_python_scalar_leaves(tmp_path):
     """Python int/float leaves (schedule counters) survive save/restore
     EXACTLY — including non-fp32-representable floats and ints >= 2**31

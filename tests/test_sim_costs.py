@@ -3,6 +3,8 @@ communication model (``Method.comm_scalars`` / ``MeterRegistry``) and the
 ``CommLedger``-measured bytes must agree across the tau spectrum and the
 whole codec zoo — the sim prices iterations off the ledger, so a divergence
 here silently corrupts every simulated wall-clock number."""
+import math
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -13,6 +15,15 @@ from repro.dist import CommLedger, get_compressor
 from repro.launch.mesh import make_test_mesh
 from repro.metrics import MeterRegistry, comm_report
 from repro.opt.optimizers import const_schedule, sgd
+from repro.sim import (
+    ClusterSpec,
+    CollectiveModel,
+    LinkModel,
+    Topology,
+    compute_model_for,
+    make_sim_methods,
+    simulate,
+)
 
 
 def quad_loss(params, batch):
@@ -81,6 +92,96 @@ def test_codec_wire_estimates_agree_with_ledger(tau, codec_name):
     measured, analytic = (int(part.split("=")[1])
                           for part in fo_line.split(",")[1:3])
     assert measured == analytic
+
+
+# --------------------------------------------------------------------------- #
+# CollectiveModel: the ring/tree/hierarchical all-reduce times must match the
+# closed-form alpha-beta expressions, and simulated runs must still price
+# every iteration at the CommLedger-booked bytes (never re-derived) no matter
+# which topology does the pricing.
+# --------------------------------------------------------------------------- #
+ALPHA, BETA, NBYTES = 2e-4, 1e-6, 4096.0
+LINK = LinkModel(alpha=ALPHA, beta=BETA)
+
+
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_ring_all_reduce_closed_form(w):
+    cm = CollectiveModel(link=LINK, kind="ring")
+    expect = 2 * (w - 1) * ALPHA + (2 * (w - 1) / w) * NBYTES * BETA
+    assert cm.all_reduce_time(NBYTES, w) == pytest.approx(expect)
+
+
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_tree_all_reduce_closed_form(w):
+    cm = CollectiveModel(link=LINK, kind="tree")
+    rounds = 2 * math.ceil(math.log2(w))
+    expect = rounds * (ALPHA + NBYTES * BETA)
+    assert cm.all_reduce_time(NBYTES, w) == pytest.approx(expect)
+
+
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_flat_all_reduce_is_the_pr3_link_model(w):
+    cm = CollectiveModel(link=LINK, kind="flat")
+    assert cm.all_reduce_time(NBYTES, w) == pytest.approx(LINK.time(NBYTES))
+
+
+@pytest.mark.parametrize("w,pods", [(4, 2), (8, 2), (8, 4)])
+def test_hierarchical_all_reduce_closed_form(w, pods):
+    """Intra-pod ring over w/pods workers on the fast link + inter-pod ring
+    over pods on the slow link."""
+    inter = LinkModel(alpha=5e-3, beta=1e-5)
+    cm = CollectiveModel(link=LINK, kind="ring", pods=pods, inter_link=inter)
+    wpp = w // pods
+    intra = (2 * (wpp - 1) * ALPHA + (2 * (wpp - 1) / wpp) * NBYTES * BETA
+             if wpp > 1 else 0.0)
+    ixp = (2 * (pods - 1) * inter.alpha
+           + (2 * (pods - 1) / pods) * NBYTES * inter.beta)
+    assert cm.all_reduce_time(NBYTES, w) == pytest.approx(intra + ixp)
+
+
+def test_collective_degenerate_cases():
+    cm = CollectiveModel(link=LINK, kind="ring")
+    assert cm.all_reduce_time(NBYTES, 1) == 0.0    # one worker: no exchange
+    assert cm.all_reduce_time(0, 8) == 0.0         # no bytes: no time
+
+
+def _sim_quad(spec, n_iters=8, tau=4):
+    def quad(params, batch):
+        return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+    params = {"x": jnp.zeros((64,), jnp.float32)}
+    batch = {"t": jnp.ones((8, 64), jnp.float32)}
+
+    def batches():
+        while True:
+            yield batch
+
+    sm = make_sim_methods(quad, params, spec, tau=tau, lr=0.1, zo_lr=0.05,
+                          which=["ho_sgd"])["ho_sgd"]
+    return simulate(sm, params, batches(), spec, n_iters,
+                    compute=compute_model_for(params, spec, 2))
+
+
+@pytest.mark.parametrize("spec_kw", [
+    dict(collective="ring"),
+    dict(collective="tree"),
+    dict(collective="ring",
+         topology=Topology(pods=2, inter_alpha=1e-3, inter_bandwidth=1e5)),
+])
+def test_sim_bytes_stay_ledger_booked_under_topologies(spec_kw):
+    """Changing the collective changes TIME, never BYTES: every topology
+    prices the exact bytes the replayed programs booked (FO = 4d, ZO = 4m),
+    and the simulated comm seconds equal the closed-form collective time at
+    those booked byte counts."""
+    d, m = 64, 4
+    spec = ClusterSpec(m=m, flops_per_sec=1e9, bandwidth=1e6, seed=0,
+                       **spec_kw)
+    res = _sim_quad(spec)
+    # 2 FO steps book 4*d each; 6 ZO steps book 4*m each — identical to the
+    # flat-topology pin in test_sim.py
+    assert res.bytes_total == 2 * 4 * d + 6 * 4 * m
+    expect_comm = sum(spec.collective_time(b, m) for b in res.comm_bytes)
+    assert res.comm_s == pytest.approx(expect_comm)
 
 
 def test_csvlogger_context_manager_closes_on_exception(tmp_path):
