@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
   kernels — Pallas kernel micro-benches + HBM-byte models
   roofline— dry-run derived roofline terms (if artifacts exist)
   sim     — time-to-target-loss frontier on the simulated cluster
+            (tau/m/straggler/topology axes plus the compress-mode axis:
+            per-worker vs legacy QSGD wire accounting)
 
 ``--quick`` trims iteration counts for CI-speed runs.
 """

@@ -1,10 +1,11 @@
 """Time-to-target-loss frontier on the simulated cluster (repro.sim).
 
-Sweeps tau, m, the FO codec, straggler severity, the link topology
-(flat/ring/tree all-reduce, 1 vs 2 pods) and the async staleness bound;
-every configuration replays the REAL step functions through the
-discrete-event cluster model and reports when (in simulated seconds) it
-reaches the target loss.  This is the paper's Table-1 tradeoff collapsed
+Sweeps tau, m, the FO codec (per-worker vs legacy wire accounting — the
+compress-mode axis showing the honest QSGD byte cost), straggler severity,
+the link topology (flat/ring/tree/gossip all-reduce, 1 vs 2 pods) and the
+async staleness bound; every configuration replays the REAL round programs
+through the discrete-event cluster model and reports when (in simulated
+seconds) it reaches the target loss.  This is the paper's Table-1 tradeoff collapsed
 onto one axis — and the benchmark asserts the qualitative ordering on a
 bandwidth-constrained cluster:
 
@@ -102,8 +103,8 @@ def main(argv=None):
     codecs = ["none", "qsgd"] if args.smoke else ["none", "qsgd", "signsgd",
                                                   "topk"]
     strags = [0.0, 0.3] if args.smoke else [0.0, 0.2, 0.5]
-    singles = ["sync_sgd", "zo_sgd", "ho_sgd_adaptive", "pa_sgd", "ri_sgd",
-               "qsgd"]
+    singles = ["sync_sgd", "zo_sgd", "ho_sgd_adaptive", "pa_sgd", "pa_gossip",
+               "ri_sgd", "qsgd"]
 
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
@@ -130,17 +131,21 @@ def main(argv=None):
     # several sweep axes pass through the same configuration (e.g. the base
     # tau/m/codec/straggler point, or stale=0 when the base is already
     # synchronous) — memoize full simulate runs on (method, cluster, tau,
-    # codec) so each distinct configuration is simulated exactly once
+    # codec, wire mode) so each distinct configuration is simulated exactly
+    # once
     memo = {}
 
-    def emit(cfg_name, cluster, *, method="ho_sgd", tau=None, codec=None):
-        key = (method, cluster, tau if tau is not None else args.tau, codec)
+    def emit(cfg_name, cluster, *, method="ho_sgd", tau=None, codec=None,
+             wire="per_worker"):
+        key = (method, cluster, tau if tau is not None else args.tau, codec,
+               wire)
         s = memo.get(key)
         if s is None:
             sm = make_sim_methods(
                 mlp_loss, params, cluster,
                 **{**mk, "tau": key[2]},
                 codec=get_compressor(codec) if codec else None,
+                compress_mode=wire,
                 which=[method])[method]
             s = memo[key] = run_one(cfg_name, sm, params, ds, cluster, **run)
         s = dict(s, config=cfg_name)
@@ -161,9 +166,15 @@ def main(argv=None):
         emit(f"ho_sgd[m={m}]", base.with_(m=m))
 
     # FO-codec frontier (wire bytes straight from the ledger's booked codec)
+    # — the compress-mode axis shows the HONEST per-worker QSGD byte cost
+    # (nbytes x m, each worker receives every worker's code) next to the
+    # legacy post-reduction accounting
     for codec in codecs:
         emit(f"ho_sgd[codec={codec}]", base,
              codec=None if codec == "none" else codec)
+        if codec != "none":
+            emit(f"ho_sgd[codec={codec},wire=legacy]", base, codec=codec,
+                 wire="legacy")
 
     # straggler severity frontier
     for p in strags:
@@ -174,8 +185,8 @@ def main(argv=None):
     # non-flat links (the regime where model-averaging baselines look
     # artificially close on a flat switch)
     topo_axes = ([("ring", 1), ("ring", 2)] if args.smoke
-                 else [("flat", 1), ("ring", 1), ("tree", 1), ("ring", 2),
-                       ("tree", 2)])
+                 else [("flat", 1), ("ring", 1), ("tree", 1), ("gossip", 1),
+                       ("ring", 2), ("tree", 2)])
     topo_ok = {}
     for kind, pods in topo_axes:
         cl = base.with_(collective=kind, topology=topo(pods))
@@ -195,8 +206,10 @@ def main(argv=None):
          base.with_(elastic=True, fail_rate=2.0, downtime=0.5,
                     restart_time=0.05))
 
-    # the baselines at the base configuration
+    # the baselines at the base configuration (QSGD additionally under the
+    # legacy post-reduction byte accounting, for the honest-vs-legacy gap)
     by_name = {name: emit(name, base, method=name) for name in singles}
+    emit("qsgd[wire=legacy]", base, method="qsgd", wire="legacy")
 
     # the acceptance ordering (paper Table 1, on simulated wall-clock)
     ho = next(r for r in rows if r["config"] == f"ho_sgd[tau={args.tau}]")

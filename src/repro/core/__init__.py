@@ -11,8 +11,18 @@ from repro.core.ho_sgd import (  # noqa: F401
     run_method,
 )
 from repro.core.baselines import (  # noqa: F401
+    make_gossip_pa_sgd,
     make_pa_sgd,
     make_qsgd,
     make_ri_sgd,
     make_zo_svrg_ave,
+)
+from repro.core.rounds import (  # noqa: F401
+    Round,
+    RoundExecutor,
+    RoundProgram,
+    RoundStep,
+    Wire,
+    ho_sgd_program,
+    to_method,
 )

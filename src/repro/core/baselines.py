@@ -1,68 +1,135 @@
-"""Baselines the paper compares against (Table 1 / §5).
+"""Baselines the paper compares against (Table 1 / §5), as round programs.
 
 * PA-SGD — periodic model averaging (McMahan et al. 2016; Wang & Joshi 2018):
   each worker runs local SGD, models averaged every tau iterations.
 * RI-SGD — redundancy-infused model averaging (Haddadpour et al. 2019):
   PA-SGD where each worker's shard overlaps a mu_r fraction of its peers'
   data (emulated at the data layer via ``ri_shard_batch``).
+* Gossip-PA — decentralized PA-SGD: the averaging round is a ring
+  ``neighbor_exchange`` (each worker mixes with its two ring neighbors)
+  instead of a full ``tree_average`` — the decentralized scenario the
+  round IR opens (cf. the compressed-ZO decentralized baselines in
+  PAPERS.md).
 * ZO-SVRG-Ave — zeroth-order SVRG (Liu et al. 2018): epoch anchor gradient
   over the full dataset + variance-reduced ZO inner steps.  Requires full
-  dataset storage (the drawback the paper highlights).
-* QSGD — s-level stochastically-quantized gradient SGD (Alistarh et al. 2017).
+  dataset storage (the drawback the paper highlights).  Not a per-round
+  collective method — stays a plain ``Method``.
+* QSGD — s-level stochastically-quantized gradient SGD (Alistarh et al.
+  2017), expressed through the round IR's wire codec hook: every worker
+  encodes its own shard gradient (``repro.dist.compress.qsgd``), the
+  reducer decodes — per-worker wire bytes = ``nbytes`` × active workers.
+
+PA/RI/Gossip/QSGD are ``repro.core.rounds`` programs; their ``Method`` view
+(``rounds.to_method``) runs the schedule over all m workers single-host,
+and the simulator replays the same programs per worker
+(``Method.program``).
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+import math
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import directions as D
-from repro.core.ho_sgd import Method, _split_workers
+from repro.core import rounds as R
+from repro.core.ho_sgd import Method
 from repro.core.zo_grad import zo_coefficient
-from repro.opt.optimizers import apply_deltas
+from repro.dist import compress as compress_mod
 
 
 # --------------------------------------------------------------------------- #
-# PA-SGD / RI-SGD (model averaging)
+# PA-SGD / RI-SGD / Gossip-PA (model averaging as round programs)
 # --------------------------------------------------------------------------- #
-def make_pa_sgd(loss_fn, m: int, tau: int, lr: float, name: str = "pa_sgd") -> Method:
-    @jax.jit
-    def local_steps(params_m, batch_m):
-        """One local SGD step per worker (vmapped over the worker dim)."""
-        def one(params, batch):
-            loss, g = jax.value_and_grad(loss_fn)(params, batch)
-            params = jax.tree.map(
-                lambda p, gg: (p.astype(jnp.float32) - lr * gg.astype(jnp.float32)).astype(p.dtype),
-                params, g)
-            return params, loss
-        return jax.vmap(one)(params_m, batch_m)
+def _pa_rounds(loss_fn, lr: float):
+    """The two PA-SGD rounds: a local-SGD round (no collective) and an
+    averaging round; both run the same per-replica SGD local."""
+
+    def local(t, worker, model, shard):
+        loss, g = jax.value_and_grad(loss_fn)(model, shard)
+        new = jax.tree.map(
+            lambda p, gg: (p.astype(jnp.float32)
+                           - lr * gg.astype(jnp.float32)).astype(p.dtype),
+            model, g)
+        return new, loss
 
     @jax.jit
-    def average(params_m):
-        avg = jax.tree.map(lambda x: jnp.mean(x.astype(jnp.float32), 0), params_m)
+    def _write_back(replicas, updated, workers):
+        return jax.tree.map(lambda Rr, U: Rr.at[workers].set(U),
+                            replicas, updated)
+
+    @jax.jit
+    def _broadcast_avg(replicas, avg, workers):
         return jax.tree.map(
-            lambda x, a: jnp.broadcast_to(a.astype(x.dtype), x.shape), params_m, avg)
+            lambda Rr, A: Rr.at[workers].set(
+                jnp.broadcast_to(A.astype(Rr.dtype),
+                                 (workers.shape[0], *A.shape))),
+            replicas, avg)
+
+    def apply_local(t, params, state, reduced, workers, aux):
+        replicas = _write_back(state["replicas"], reduced, workers)
+        params = jax.tree.map(lambda x: x[0], replicas)
+        return params, {**state, "replicas": replicas}, {
+            "loss": jnp.mean(aux)}
+
+    def apply_avg(t, params, state, reduced, workers, aux):
+        replicas = _broadcast_avg(state["replicas"], reduced, workers)
+        params = jax.tree.map(lambda x: x[0], replicas)
+        return params, {**state, "replicas": replicas}, {
+            "loss": jnp.mean(aux)}
+
+    def apply_mix(t, params, state, reduced, workers, aux):
+        # neighbor_exchange: reduced is worker-stacked mixed replicas
+        replicas = _write_back(state["replicas"], reduced, workers)
+        params = jax.tree.map(lambda x: x[0], replicas)
+        return params, {**state, "replicas": replicas}, {
+            "loss": jnp.mean(aux)}
+
+    step_rnd = R.Round("pa_local", 1, "none", local, apply_local,
+                       replica=True)
+    avg_rnd = R.Round("pa_avg", 1, "tree_average", local, apply_avg,
+                      replica=True)
+    mix_rnd = R.Round("pa_gossip", 1, "neighbor_exchange", local, apply_mix,
+                      replica=True)
+    return step_rnd, avg_rnd, mix_rnd
+
+
+def pa_sgd_program(loss_fn, m: int, tau: int, lr: float, *,
+                   name: str = "pa_sgd", gossip: bool = False,
+                   prepare=None, gevals: float = 1.0) -> R.RoundProgram:
+    step_rnd, avg_rnd, mix_rnd = _pa_rounds(loss_fn, lr)
+    sync_rnd = mix_rnd if gossip else avg_rnd
 
     def init(params):
-        return jax.tree.map(lambda p: jnp.broadcast_to(p[None], (m, *p.shape)), params)
+        return {"replicas": jax.tree.map(
+            lambda p: jnp.broadcast_to(p[None], (m, *p.shape)), params)}
 
-    def step(t, params, params_m, batch, key=None):
-        # ``params`` tracks the averaged model; local replicas live in state.
-        batch_m = _split_workers(batch, m)
-        params_m, losses = local_steps(params_m, batch_m)
+    def round_for(t: int, state) -> R.RoundStep:
         synced = (t + 1) % tau == 0
-        if synced:
-            params_m = average(params_m)
-        params = jax.tree.map(lambda x: x[0], params_m)
-        return params, params_m, {"loss": jnp.mean(losses), "order": 1}
+        return R.RoundStep(sync_rnd if synced else step_rnd, t, {})
 
-    return Method(
-        name, init, step,
-        comm_scalars=lambda d: d / tau,
+    # gossip moves min(2, m-1) neighbor models per averaging round instead
+    # of the one averaged tree of the all-to-all exchange
+    per_sync = float(min(2, m - 1)) if gossip else 1.0
+    return R.RoundProgram(
+        name, m, init, round_for,
+        comm_scalars=lambda d: per_sync * d / tau,
         fevals=lambda d: 0.0,
-        gevals=lambda d: 1.0,
+        gevals=lambda d: gevals,
+        prepare=prepare,
     )
+
+
+def make_pa_sgd(loss_fn, m: int, tau: int, lr: float,
+                name: str = "pa_sgd") -> Method:
+    return R.to_method(pa_sgd_program(loss_fn, m, tau, lr, name=name))
+
+
+def make_gossip_pa_sgd(loss_fn, m: int, tau: int, lr: float) -> Method:
+    """Decentralized PA-SGD: ring-gossip mixing on the averaging rounds."""
+    return R.to_method(pa_sgd_program(loss_fn, m, tau, lr, name="pa_gossip",
+                                      gossip=True))
 
 
 def ri_shard_batch(batch: Any, m: int, mu_r: float, key) -> Any:
@@ -82,17 +149,13 @@ def ri_shard_batch(batch: Any, m: int, mu_r: float, key) -> Any:
 
 
 def make_ri_sgd(loss_fn, m: int, tau: int, lr: float, mu_r: float = 0.25) -> Method:
-    base = make_pa_sgd(loss_fn, m, tau, lr, name="ri_sgd")
-
-    def step(t, params, state, batch, key=None):
+    def prepare(t, batch, key):
         key = key if key is not None else jax.random.key(t)
-        batch = ri_shard_batch(batch, m, mu_r, jax.random.fold_in(key, t))
-        return base.step(t, params, state, batch)
+        return ri_shard_batch(batch, m, mu_r, jax.random.fold_in(key, t))
 
     # RI-SGD stores (1 + mu_r*m) shards per worker -> higher compute/storage
-    return base._replace(
-        step=step, gevals=lambda d: 1.0 + mu_r,  # extra redundant-sample grads
-    )
+    return R.to_method(pa_sgd_program(loss_fn, m, tau, lr, name="ri_sgd",
+                                      prepare=prepare, gevals=1.0 + mu_r))
 
 
 # --------------------------------------------------------------------------- #
@@ -150,10 +213,12 @@ def make_zo_svrg_ave(
 
 
 # --------------------------------------------------------------------------- #
-# QSGD (Alistarh et al., 2017)
+# QSGD (Alistarh et al., 2017) — through the round IR's wire codec hook
 # --------------------------------------------------------------------------- #
 def quantize_qsgd(g: jax.Array, s: int, key) -> jax.Array:
-    """Unbiased s-level stochastic quantization Q_s(g) of one flat vector."""
+    """Unbiased s-level stochastic quantization Q_s(g) of one flat vector
+    (the reference quantizer; the QSGD method itself rides the
+    ``repro.dist.compress.qsgd`` codec through the round IR's wire hook)."""
     norm = jnp.linalg.norm(g) + 1e-30
     level = jnp.abs(g) / norm * s
     lower = jnp.floor(level)
@@ -162,39 +227,44 @@ def quantize_qsgd(g: jax.Array, s: int, key) -> jax.Array:
     return jnp.sign(g) * norm * (lower + bump) / s
 
 
-def make_qsgd(loss_fn, m: int, s: int, lr: float) -> Method:
+def qsgd_program(loss_fn, m: int, s: int, lr: float, *,
+                 compress_mode: str = "per_worker") -> R.RoundProgram:
+    codec = compress_mod.qsgd(s)
+
+    def local(t, worker, model, shard):
+        loss, g = jax.value_and_grad(loss_fn)(model, shard)
+        return g, loss
+
     @jax.jit
-    def step_jit(t, params, batch_m, key):
-        def worker_grad(params, batch):
-            return jax.value_and_grad(loss_fn)(params, batch)
-        losses, grads_m = jax.vmap(worker_grad, in_axes=(None, 0))(params, batch_m)
-        leaves, treedef = jax.tree.flatten(grads_m)
-        keys = jax.random.split(key, len(leaves) * m).reshape(len(leaves), m)
-        q = [
-            jax.vmap(lambda gw, kk: quantize_qsgd(gw.reshape(-1), s, kk).reshape(gw.shape))(
-                lf, keys[j]
-            )
-            for j, lf in enumerate(leaves)
-        ]
-        g_mean = jax.tree.map(
-            lambda x: jnp.mean(x.astype(jnp.float32), 0), jax.tree.unflatten(treedef, q))
+    def _apply_j(t, params, g_mean, f_mean):
         params = jax.tree.map(
-            lambda p, g: (p.astype(jnp.float32) - lr * g).astype(p.dtype), params, g_mean)
-        return params, jnp.mean(losses)
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, g_mean)
+        return params, f_mean
+
+    def apply(t, params, state, reduced, workers, aux):
+        params, loss = _apply_j(t, params, reduced, jnp.mean(aux))
+        return params, state, {"loss": loss}
+
+    rnd = R.Round("qsgd", 1, "all_reduce", local, apply,
+                  wire=R.Wire(codec, compress_mode))
 
     def init(params):
-        return ()
+        return {}
 
-    def step(t, params, state, batch, key=None):
-        key = key if key is not None else jax.random.key(0)
-        batch_m = _split_workers(batch, m)
-        params, loss = step_jit(jnp.int32(t), params, batch_m, jax.random.fold_in(key, t))
-        return params, state, {"loss": loss, "order": 1}
+    def round_for(t: int, state) -> R.RoundStep:
+        return R.RoundStep(rnd, t, {})
 
-    import math
-    return Method(
-        "qsgd", init, step,
-        comm_scalars=lambda d: (s * s + s * math.sqrt(d)) / 32.0,  # ~bits/32 per Table 1
+    return R.RoundProgram(
+        "qsgd", m, init, round_for,
+        comm_scalars=lambda d: (s * s + s * math.sqrt(d)) / 32.0,  # Table 1
         fevals=lambda d: 0.0,
         gevals=lambda d: 1.0,
     )
+
+
+def make_qsgd(loss_fn, m: int, s: int, lr: float,
+              compress_mode: str = "per_worker") -> Method:
+    return R.to_method(qsgd_program(loss_fn, m, s, lr,
+                                    compress_mode=compress_mode))

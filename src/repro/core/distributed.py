@@ -1,19 +1,35 @@
-"""Mesh-distributed HO-SGD: the production implementation of Algorithm 1.
+"""Mesh-distributed HO-SGD: the production lowering of the round-program IR.
 
-Workers = (pod, data) slices; tensor parallelism on the auto ``model`` axis.
+The method itself — per-worker rounds with an FO gradient sync every tau
+iterations — is defined ONCE in ``repro.core.rounds`` (``fo_round`` /
+``zo_round`` / ``ho_sgd_program``).  This module LOWERS those rounds to a
+device mesh, fusing each round's per-worker locals + collective + apply
+into one jitted program:
 
-* ``make_fo_step``  — eq. (3): pjit data-parallel first-order step.  The
-  d-dimensional gradient all-reduce over the worker axes is inserted by XLA
-  (this is the expensive collective the paper amortizes over tau).
-* ``make_zo_step``  — eq. (4)-(6): partial-auto ``jax.shard_map`` (manual
-  over worker axes).  Each worker evaluates the loss twice on its local
-  shard, all-gathers **one scalar per worker**, regenerates every worker's
-  direction from the pre-shared seed, and reconstructs the update locally.
-  Inter-worker traffic: 4*m bytes — independent of d.
+* ``make_fo_step``  — lowers the FO round (eq. 3): pjit data-parallel step
+  whose d-dimensional gradient all-reduce over the worker axes is inserted
+  by XLA (this is the expensive collective the paper amortizes over tau).
+  The round's wire codec lowers to a per-worker encode + reducer decode
+  (``compress_mode="per_worker"``, QSGD's real protocol, booked at
+  ``nbytes`` × m) or the legacy post-reduction simulation
+  (``"legacy"``, booked at one worker's ``nbytes``).
+* ``make_zo_step``  — lowers the ZO round (eq. 4-6): partial-auto
+  ``jax.shard_map`` (manual over worker axes).  Each worker evaluates the
+  loss twice on its local shard, all-gathers **one scalar per worker**,
+  regenerates every worker's direction from the pre-shared seed, and
+  reconstructs the update locally.  Inter-worker traffic: 4*m bytes —
+  independent of d.
+
+On the synchronous full-membership path the lowered programs are
+bit-identical to the pre-IR step functions (pinned by
+``tests/test_rounds_equivalence.py``); the simulator replays the SAME
+rounds per worker (``repro.sim.runner``) when membership or staleness
+makes the monolithic fusion unfaithful.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import Any, Callable, Optional
 
@@ -22,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
+from repro.core import rounds
 from repro.core.engine import make_engine
 from repro.core.ho_sgd import HOSGDConfig
 from repro.dist import collectives as coll
@@ -34,6 +51,11 @@ def _replicated_specs(tree: Any) -> Any:
     return jax.tree.map(lambda _: P(), tree)
 
 
+def _mesh_workers(mesh: Mesh) -> int:
+    # host-side mesh arithmetic: plain ints, never jax arrays
+    return max(1, math.prod(mesh.shape[a] for a in worker_axes(mesh)))
+
+
 def make_fo_step(
     loss_fn: Callable[[Any, Any], jax.Array],
     mesh: Mesh,
@@ -42,22 +64,90 @@ def make_fo_step(
     scan_unroll: bool = False,
     compressor: Optional[Compressor] = None,
     seed: int = 0,
+    compress_mode: str = "per_worker",
+    m: Optional[int] = None,
 ) -> Callable:
     """jit(train_step): (t, params, opt_state, batch) -> (params, state, loss).
 
-    ``grad_accum`` splits the batch into microbatches scanned sequentially
-    with an fp32 gradient accumulator — bounds the backward residual stack
-    (n_layers * tokens_mb * d_model per device) that dominates train memory.
+    Lowers ``rounds.fo_round`` to the mesh.  ``grad_accum`` splits the batch
+    into microbatches scanned sequentially with an fp32 gradient accumulator
+    — bounds the backward residual stack (n_layers * tokens_mb * d_model per
+    device) that dominates train memory.
 
     ``compressor`` hooks a QSGD/signSGD/top-k codec onto the gradient
-    all-reduce: each worker's gradient is quantized before synchronization
-    (simulated here as decode(encode(g)) on the reduced gradient — every
-    worker applies the same code, so the model state stays replicated), and
-    the step books the codec's wire bytes instead of the dense 4*d.
+    all-reduce through the round's wire hook.  ``compress_mode="per_worker"``
+    (the faithful protocol) splits the batch over the ``m`` workers
+    in-program, encodes each worker's shard gradient independently and
+    decodes at the reducer — the step books ``nbytes`` × m wire bytes (each
+    worker receives every worker's code).  Cost of that fidelity: the m
+    shard gradients are materialized together (m× the gradient memory of
+    the fused data-parallel path) and the m codec round-trips serialize —
+    fine for the simulator's models and CPU rehearsals; pass
+    ``compress_mode="legacy"`` (CLI ``--compress-mode legacy``) on
+    LLM-scale meshes where the post-reduction approximation is the right
+    trade.  ``"legacy"`` keeps the historical post-reduction simulation
+    ``decode(encode(g))`` on the reduced gradient, booked at one worker's
+    ``nbytes``; ``grad_accum > 1`` falls back to it with a warning (the
+    microbatch scan collapses the per-worker gradients).  ``m`` defaults to
+    the mesh's worker count; with ``m == 1`` the two modes coincide and the
+    program is bit-identical to the uncompressed-era legacy path.
     """
+    rnd = rounds.fo_round(loss_fn, opt,
+                          wire=rounds.Wire(compressor, compress_mode))
+    return lower_fo_round(rnd, mesh, grad_accum=grad_accum,
+                          scan_unroll=scan_unroll, seed=seed, m=m)
+
+
+def lower_fo_round(
+    rnd: rounds.Round,
+    mesh: Mesh,
+    *,
+    grad_accum: int = 1,
+    scan_unroll: bool = False,
+    seed: int = 0,
+    m: Optional[int] = None,
+) -> Callable:
+    """Fuse an FO round's per-worker locals + all-reduce + apply into one
+    data-parallel program (the gradient reduction is GSPMD-inserted)."""
+    loss_fn, opt = rnd.meta["loss_fn"], rnd.meta["opt"]
+    compressor, mode = rnd.wire.codec, rnd.wire.mode
+    m = m if m is not None else _mesh_workers(mesh)
+    per_worker = compressor is not None and mode == "per_worker" and m > 1
+    if per_worker and grad_accum > 1:
+        # per-worker encoding needs the m shard gradients individually,
+        # which the microbatch-scan accumulator collapses — fall back to
+        # the legacy post-reduction codec instead of refusing to train
+        # (previously-working --compress + grad_accum configs keep working)
+        warnings.warn(
+            "per-worker FO encoding does not compose with grad_accum > 1; "
+            "falling back to compress_mode='legacy' (post-reduction codec)",
+            stacklevel=2)
+        per_worker = False
 
     def fo_step(t, params, opt_state, batch):
-        if grad_accum <= 1:
+        if per_worker:
+            # faithful per-worker encode: the m workers' shard gradients are
+            # computed in-program, each encoded with its own key and decoded
+            # at the reducer — every worker receives m codes (nbytes * m)
+            mb = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+            losses, grads_m = jax.vmap(
+                lambda b: jax.value_and_grad(loss_fn)(params, b))(mb)
+            key_t = jax.random.fold_in(jax.random.key(seed), t)
+            dec, wire = [], 0
+            for w in range(m):
+                g_w = jax.tree.map(lambda x: x[w], grads_m)
+                d_w, nb = compress_tree(compressor, g_w,
+                                        jax.random.fold_in(key_t, w))
+                dec.append(d_w)
+                wire = nb * m
+            grads = jax.tree.map(
+                lambda *xs: jnp.mean(jnp.stack(
+                    [x.astype(jnp.float32) for x in xs]), 0).astype(xs[0].dtype),
+                *dec)
+            loss = jnp.mean(losses)
+            coll.note_all_reduce(grads, nbytes=wire, tag=compressor.name)
+        elif grad_accum <= 1:
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
         else:
             # split so the *major* dim stays the (sharded) batch dim, then
@@ -84,14 +174,17 @@ def make_fo_step(
                 micro, init, mb, unroll=grad_accum if scan_unroll else 1)
             grads = jax.tree.map(lambda g: g / grad_accum, grads)
             loss = loss / grad_accum
-        # the d-dim gradient all-reduce is inserted by GSPMD (sharded batch x
-        # replicated params); book its wire bytes — or the codec's — here.
-        if compressor is not None:
-            grads, wire = compress_tree(
-                compressor, grads, jax.random.fold_in(jax.random.key(seed), t))
-            coll.note_all_reduce(grads, nbytes=wire, tag=compressor.name)
-        else:
-            coll.note_all_reduce(grads, tag="grads")
+        if not per_worker:
+            # the d-dim gradient all-reduce is inserted by GSPMD (sharded
+            # batch x replicated params); book its wire bytes — or the
+            # codec's — here.
+            if compressor is not None:
+                grads, wire = compress_tree(
+                    compressor, grads,
+                    jax.random.fold_in(jax.random.key(seed), t))
+                coll.note_all_reduce(grads, nbytes=wire, tag=compressor.name)
+            else:
+                coll.note_all_reduce(grads, tag="grads")
         deltas, opt_state = opt.update(grads, opt_state, params, t)
         return apply_deltas(params, deltas), opt_state, loss
 
@@ -110,10 +203,11 @@ def make_zo_step(
 ) -> Callable:
     """(t, params, opt_state, batch) -> (params, opt_state, loss).
 
-    The shard_map inner function returns the reconstructed gradient estimate
-    (replicated across workers — every worker computes the same sum); the
-    optimizer update composes outside, so HO-SGD's ZO steps can drive any
-    optimizer (beyond-paper: ZO-Adam).
+    Lowers ``rounds.zo_round`` to the mesh.  The shard_map inner function
+    returns the reconstructed gradient estimate (replicated across workers —
+    every worker computes the same sum); the optimizer update composes
+    outside, so HO-SGD's ZO steps can drive any optimizer (beyond-paper:
+    ZO-Adam).
 
     The direction algebra itself lives in ``repro.core.engine`` — the
     backend is picked by ``ho.engine`` ('fused' keeps the direction out of
@@ -136,6 +230,26 @@ def make_zo_step(
     sharding (spmd_partitioner_util.cc:504; stack in EXPERIMENTS.md §Dry-run
     notes) — a real-XLA limitation we document rather than hide.
     """
+    rnd = rounds.zo_round(loss_fn, ho, opt, m=m)
+    return lower_zo_round(rnd, mesh, m=m, fsdp=fsdp,
+                          param_specs_tree=param_specs_tree,
+                          vmap_workers=vmap_workers)
+
+
+def lower_zo_round(
+    rnd: rounds.Round,
+    mesh: Mesh,
+    *,
+    m: Optional[int] = None,
+    fsdp: bool = False,
+    param_specs_tree: Any = None,
+    vmap_workers: bool = False,
+) -> Callable:
+    """Fuse a ZO round's per-worker coefficient evals + scalar all-gather +
+    reconstruction into one program: the partial-auto shard_map path on new
+    jax, the auto-sharded (GSPMD) fallback with the m evals in-program on
+    0.4.x (``repro.compat``)."""
+    loss_fn, ho, opt = (rnd.meta["loss_fn"], rnd.meta["ho"], rnd.meta["opt"])
     if fsdp:
         wa = ()
     else:
@@ -240,11 +354,14 @@ def make_distributed_ho_sgd(
     params_like: Any = None,
     compressor: Optional[Compressor] = None,
     vmap_workers: bool = False,
+    compress_mode: str = "per_worker",
 ):
     """Returns (fo_step, zo_step) honoring the arch's production knobs.
 
-    ``compressor`` (repro.dist.compress) quantizes the FO gradient exchange;
-    the ZO step is untouched — its traffic is already one scalar per worker.
+    ``compressor`` (repro.dist.compress) quantizes the FO gradient exchange
+    (``compress_mode``: per-worker encode + reducer decode, or the legacy
+    post-reduction simulation); the ZO step is untouched — its traffic is
+    already one scalar per worker.
     """
     opt = opt or sgd(const_schedule(ho.lr), ho.momentum)
     ga = getattr(model_cfg, "grad_accum", 1) if model_cfg is not None else 1
@@ -254,7 +371,8 @@ def make_distributed_ho_sgd(
     if model_cfg is not None and params_like is not None:
         specs = param_specs(model_cfg, params_like, mesh)
     fo = make_fo_step(loss_fn, mesh, opt, grad_accum=ga, scan_unroll=su,
-                      compressor=compressor, seed=ho.seed)
+                      compressor=compressor, seed=ho.seed,
+                      compress_mode=compress_mode)
     zo = make_zo_step(loss_fn, mesh, ho, opt, fsdp=fsdp, param_specs_tree=specs,
                       vmap_workers=vmap_workers)
     return fo, zo

@@ -62,6 +62,9 @@ class Method(NamedTuple):
     comm_scalars: Callable[[int], float]
     fevals: Callable[[int], float]
     gevals: Callable[[int], float]
+    # the per-worker round program this method was built from, when it was
+    # (repro.core.rounds) — the simulator's per-worker replay handle
+    program: Optional[Any] = None
 
 
 def _split_workers(batch: Any, m: int) -> Any:

@@ -30,7 +30,7 @@ from repro.sim import (
 )
 
 METHODS = ["ho_sgd", "ho_sgd_adaptive", "sync_sgd", "zo_sgd", "pa_sgd",
-           "ri_sgd", "qsgd"]
+           "pa_gossip", "ri_sgd", "qsgd"]
 
 
 def main(argv=None):
@@ -52,6 +52,16 @@ def main(argv=None):
     ap.add_argument("--mu", type=float, default=1e-3)
     ap.add_argument("--compress", default="none",
                     choices=["none", "qsgd", "signsgd", "topk"])
+    ap.add_argument("--compress-mode", default="per_worker",
+                    choices=["per_worker", "legacy"],
+                    help="per_worker: faithful per-worker encode + server "
+                         "decode (wire bytes = nbytes x live workers); "
+                         "legacy: post-reduction decode(encode(mean))")
+    ap.add_argument("--replay", default="per_worker",
+                    choices=["per_worker", "monolithic"],
+                    help="per_worker replays rounds at the live membership "
+                         "and each worker's actual params view; monolithic "
+                         "keeps the PR-4 pricing-only replay")
     ap.add_argument("--seed", type=int, default=0)
     # cluster
     ap.add_argument("--m", type=int, default=4)
@@ -121,13 +131,15 @@ def main(argv=None):
     sims = make_sim_methods(
         mlp_loss, params, cluster, tau=args.tau, lr=args.lr, zo_lr=args.zo_lr,
         mu=args.mu, seed=args.seed, codec=get_compressor(args.compress),
-        tau_schedule=sched, which=args.methods)
+        compress_mode=args.compress_mode, tau_schedule=sched,
+        which=args.methods)
 
     print(f"sim: dataset={args.dataset} d={d:,} m={cluster.m} "
           f"bandwidth={cluster.bandwidth:.3g}B/s alpha={cluster.alpha:.3g}s "
           f"flops={cluster.flops_per_sec:.3g}/s seed={cluster.seed} "
           f"collective={cluster.collective} pods={args.pods} "
-          f"staleness={cluster.max_staleness} elastic={cluster.elastic}")
+          f"staleness={cluster.max_staleness} elastic={cluster.elastic} "
+          f"replay={args.replay} compress_mode={args.compress_mode}")
     summaries = {}
     with CSVLogger(args.log, ["method", "iter", "order", "loss", "t_sim",
                               "comm_bytes"]) as logger:
@@ -135,7 +147,8 @@ def main(argv=None):
             res = simulate(
                 sm, params, batches(ds, args.batch, seed=args.seed), cluster,
                 args.iters, compute=compute, eval_fn=eval_fn,
-                eval_every=args.eval_every, target_loss=args.target_loss)
+                eval_every=args.eval_every, target_loss=args.target_loss,
+                replay=args.replay)
             for i in range(len(res.steps)):
                 logger.log(method=name, iter=res.steps[i],
                            order=res.orders[i], loss=res.losses[i],

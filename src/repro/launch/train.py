@@ -73,6 +73,11 @@ def main(argv=None):
     ap.add_argument("--compress", default="none",
                     choices=["none", "qsgd", "signsgd", "topk"],
                     help="codec on the FO gradient all-reduce")
+    ap.add_argument("--compress-mode", default="per_worker",
+                    choices=["per_worker", "legacy"],
+                    help="per_worker: each worker encodes its shard "
+                         "gradient, the reducer decodes (wire = nbytes x m);"
+                         " legacy: post-reduction decode(encode(mean))")
     ap.add_argument("--engine", default="fused",
                     choices=["tree", "fused", "pallas"],
                     help="DirectionEngine backend for the ZO direction "
@@ -100,7 +105,8 @@ def main(argv=None):
     opt = sgd(const_schedule(args.lr))
     codec = get_compressor(args.compress)
     fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,
-                                     params_like=params, compressor=codec)
+                                     params_like=params, compressor=codec,
+                                     compress_mode=args.compress_mode)
 
     # adaptive tau: the same decision logic the Method and the simulator use
     # (core.ho_sgd.adaptive_tau_decision); the fixed-tau default path stays

@@ -10,15 +10,19 @@ algebra.
   * ``events``  — deterministic event loop, per-worker clocks, the
     barriered all-reduce primitive and its bounded-staleness async twin.
   * ``costs``   — pluggable hardware cost models (FLOP-based compute,
-    alpha–beta links, ``CollectiveModel`` pricing flat/ring/tree and
-    hierarchical multi-pod all-reduces); byte counts always come from the
-    ``CommLedger`` / ``dist.compress`` wire estimates, never re-derived.
+    alpha–beta links, ``CollectiveModel`` pricing flat/ring/tree/gossip
+    and hierarchical multi-pod all-reduces); byte counts always come from
+    the ``CommLedger`` / the round IR's wire model (``rounds.wire_nbytes``
+    over ``dist.compress`` estimates), never re-derived.
   * ``cluster`` — ``ClusterSpec``: heterogeneous speeds, seeded straggler
     distributions, Poisson failures charged a real checkpoint-restore,
     ``Topology`` (pods × workers-per-pod), ``max_staleness`` async and
     ``elastic`` leave/rejoin membership.
-  * ``runner``  — replays the real step functions from ``core`` /
-    ``core.baselines`` and emits loss-vs-simulated-seconds traces.
+  * ``runner``  — replays the real round programs from ``core.rounds`` /
+    ``core.baselines`` (per worker by default: elastic membership and
+    bounded staleness change the trajectory, not just the price;
+    ``replay="monolithic"`` keeps the pricing-only PR-4 behavior) and
+    emits loss-vs-simulated-seconds traces.
 """
 from repro.sim.cluster import (  # noqa: F401
     ClusterSpec,
@@ -33,6 +37,7 @@ from repro.sim.costs import (  # noqa: F401
     StepCost,
     config_fwd_flops,
     flat_all_reduce_time,
+    gossip_exchange_time,
     ring_all_reduce_time,
     tree_all_reduce_time,
     tree_fwd_flops,

@@ -38,7 +38,7 @@ class LinkModel:
 
 
 #: recognized all-reduce algorithms (``CollectiveModel.kind``)
-COLLECTIVE_KINDS = ("flat", "ring", "tree")
+COLLECTIVE_KINDS = ("flat", "ring", "tree", "gossip")
 
 
 def ring_all_reduce_time(link: LinkModel, nbytes: float, w: int) -> float:
@@ -68,8 +68,20 @@ def flat_all_reduce_time(link: LinkModel, nbytes: float, w: int) -> float:
     return link.time(nbytes)
 
 
+def gossip_exchange_time(link: LinkModel, nbytes: float, w: int) -> float:
+    """One ring-gossip round (the ``neighbor_exchange`` collective of the
+    round IR): every worker receives its ring neighbors' payloads —
+    ``min(2, w-1)`` sequential transfers of ``nbytes`` each:
+    ``k·(alpha + nbytes·beta)``, independent of the ring length beyond the
+    two-neighbor degree (the decentralized scaling win)."""
+    if nbytes <= 0 or w <= 1:
+        return 0.0
+    k = min(2, w - 1)
+    return k * (link.alpha + float(nbytes) * link.beta)
+
+
 _ALGOS = {"flat": flat_all_reduce_time, "ring": ring_all_reduce_time,
-          "tree": tree_all_reduce_time}
+          "tree": tree_all_reduce_time, "gossip": gossip_exchange_time}
 
 
 @dataclass(frozen=True)

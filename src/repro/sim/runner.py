@@ -1,24 +1,45 @@
 """Replay the real training steps through the discrete-event cluster model.
 
-``simulate`` drives an actual jitted step function (the same programs
-``launch.train`` runs) one iteration at a time; the event loop prices each
-iteration on the simulated cluster — per-worker compute from the FLOP
-model, a barriered alpha–beta collective for the exchange — and emits a
+``simulate`` drives an actual method one iteration at a time; the event loop
+prices each iteration on the simulated cluster — per-worker compute from the
+FLOP model, a barriered alpha–beta collective for the exchange — and emits a
 loss-vs-simulated-seconds history.  That collapses the paper's three
 incommensurable axes (bytes, function evals, loss-vs-iteration) onto one:
 time to target loss.
+
+Replay modes (``simulate(..., replay=...)``):
+
+* ``"per_worker"`` (default) — the method's ``repro.core.rounds`` program is
+  replayed round by round, PER WORKER: under elastic membership only the
+  live workers' shards, coefficients and gradients enter the collective
+  (the trajectory genuinely changes, and the live-W collective prices
+  exactly the payload each active worker sent), and under bounded
+  staleness each async ZO worker evaluates its coefficient at the params
+  version it actually had when it started the round.  On a synchronous
+  full-membership round every worker's view is current, so the runner
+  executes the round through the SAME monolithic jitted program the
+  distributed runtime lowers — the per-worker replay is bit-identical to
+  the monolithic one there (``tests/test_replay_fidelity.py``).
+* ``"monolithic"`` — the PR-4 behavior: the all-m-workers step programs run
+  unconditionally and membership/staleness change only pricing and event
+  structure, never the computed trajectory (kept for the pricing-only
+  contract and as the regression reference).
 
 Byte counts are never re-derived analytically:
 
 * HO-SGD (fixed and adaptive tau), sync-SGD and ZO-SGD replay the
   *distributed* step programs from ``core.distributed`` wrapped in a
-  ``CommLedger`` — each iteration is priced at exactly the bytes its
-  compiled program booked (including any FO compressor's wire estimate).
-* PA-SGD / RI-SGD exchange the model tree itself every tau iterations; the
-  byte count is measured from the live parameter tree with the ledger's own
-  ``_tree_nbytes``.
-* QSGD's wire size comes from ``repro.dist.compress.qsgd(s).nbytes`` — the
-  repo's one QSGD wire model.
+  ``CommLedger`` — each synchronous iteration is priced at exactly the
+  bytes its compiled program booked (including any FO compressor's wire
+  estimate, per-worker or legacy mode).  Per-worker rounds carry their
+  bytes out of the round IR's single wire model
+  (``rounds.wire_nbytes`` — also what the executor books when wrapped).
+* PA-SGD / RI-SGD exchange the model tree itself every tau iterations
+  (gossip-PA its ring neighbors' trees); the byte count is measured from
+  the live parameter tree.
+* QSGD's wire size comes from ``repro.dist.compress.qsgd(s).nbytes`` —
+  per-worker mode books ``nbytes`` × active workers (the real protocol),
+  ``legacy`` the historical post-reduction single payload.
 
 Failure injection does REAL checkpoint round-trips through
 ``repro.checkpoint``: the cluster periodically saves ``{params, state}``,
@@ -27,6 +48,7 @@ round-trip would corrupt the simulated run, not just a counter.
 """
 from __future__ import annotations
 
+import bisect
 import math
 import shutil
 import tempfile
@@ -38,9 +60,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import restore as ckpt_restore
 from repro.checkpoint import save as ckpt_save
-from repro.core.baselines import make_pa_sgd, make_qsgd, make_ri_sgd
+from repro.core import rounds as R
+from repro.core.baselines import (
+    make_gossip_pa_sgd, make_pa_sgd, make_qsgd, make_ri_sgd,
+)
 from repro.core.distributed import make_fo_step, make_zo_step
-from repro.core.ho_sgd import HOSGDConfig, adaptive_tau_decision
+from repro.core.ho_sgd import HOSGDConfig
 from repro.dist import CommLedger
 from repro.dist import compress as compress_mod
 from repro.dist.collectives import _tree_nbytes
@@ -55,14 +80,21 @@ from repro.sim.events import (
     barrier_all_reduce,
 )
 
+REPLAY_MODES = ("per_worker", "monolithic")
+
 
 @dataclass
 class SimMethod:
     """A replayable method: real step functions + per-iteration price tags.
 
-    ``step`` has the ``Method.step`` signature; ``costs_for(t, order)``
-    prices the iteration that just ran (the runner calls it after ``step``,
-    so ledger-backed byte counts are always taken from a traced program).
+    ``step`` has the ``Method.step`` signature (the monolithic all-m-workers
+    program); ``costs_for(t, order)`` prices the iteration that just ran
+    (the runner calls it after ``step``, so ledger-backed byte counts are
+    always taken from a traced program).  ``program`` is the method's
+    ``repro.core.rounds.RoundProgram`` — the per-worker replay handle; the
+    runner builds a ``RoundExecutor`` from it and consults
+    ``program.round_for`` for the coming round's order (pricing needs it
+    before the math runs).
     """
 
     name: str
@@ -70,6 +102,16 @@ class SimMethod:
     step: Callable[..., tuple]
     costs_for: Callable[[int, int], StepCost]
     ledger: Optional[CommLedger] = None
+    program: Optional[R.RoundProgram] = None
+    executor: Optional[R.RoundExecutor] = None
+
+    def __post_init__(self):
+        if self.program is not None and self.executor is None:
+            self.executor = R.RoundExecutor(self.program)
+
+    def order_for(self, t: int, state) -> int:
+        assert self.program is not None
+        return self.program.round_for(t, state).round.order
 
 
 @dataclass
@@ -161,26 +203,38 @@ def simulate(
     ckpt_dir: Optional[str] = None,
     key=None,
     max_failures: int = 100,
+    replay: str = "per_worker",
 ) -> SimResult:
     """Run ``sm`` for up to ``n_iters`` committed iterations of simulated
     time (early-stop at ``target_loss``); returns the priced history.
 
-    Determinism: same ``cluster`` (seed included), same method and data ⇒
-    bit-identical ``SimResult.trace``.  All randomness flows from
-    ``cluster.rng()`` in a fixed draw order (slowdowns are drawn for all
-    ``m`` workers even when some have elastically left, so membership
-    changes never shift later draws); simulated time never reads a wall
-    clock.
+    Determinism: same ``cluster`` (seed included), same method, data and
+    ``replay`` mode ⇒ bit-identical ``SimResult.trace``.  All randomness
+    flows from ``cluster.rng()`` in a fixed draw order (slowdowns are drawn
+    for all ``m`` workers even when some have elastically left, so
+    membership changes never shift later draws); simulated time never reads
+    a wall clock.
 
     Async (``cluster.max_staleness > 0``): ZO iterations run unbarriered —
     each worker starts a round as soon as it finished its previous one AND
-    the round ``max_staleness + 1`` back has committed cluster-wide; FO
-    sync rounds always barrier (HO-SGD's consistency point).  Elastic
+    the round ``max_staleness + 1`` back has committed cluster-wide, and
+    (per-worker replay) evaluates its coefficient at the params version it
+    actually had at that start time; FO sync rounds always barrier at the
+    fully-committed params (HO-SGD's consistency point).  Elastic
     (``cluster.elastic``): a failure removes the victim from the membership
-    with NO rollback; the survivors' collectives reprice at the live ``W``
-    and the victim rejoins after a seeded downtime through a real
+    with NO rollback; the survivors' round re-runs at the live ``W`` — its
+    collective priced at the payload those workers actually sent — and the
+    victim rejoins after a seeded downtime through a real
     ``repro.checkpoint`` round-trip of the current ``{params, state}``.
+    Under ``replay="monolithic"`` membership and staleness change pricing
+    and event structure only (the PR-4 contract).
     """
+    assert replay in REPLAY_MODES, \
+        f"unknown replay mode {replay!r}; have {REPLAY_MODES}"
+    use_pw = replay == "per_worker"
+    if use_pw:
+        assert sm.executor is not None, \
+            f"per-worker replay needs a RoundProgram on method {sm.name!r}"
     loop = EventLoop()
     clocks = WorkerClocks.start(cluster.m)
     rng = cluster.rng()
@@ -204,10 +258,21 @@ def simulate(
     stale = cluster.max_staleness
     active = list(range(cluster.m))   # live membership, ascending order
     rejoin_at: Dict[int, float] = {}  # left worker -> rejoin time
-    pending = None   # the in-flight (batch consumed) step, kept across
-                     # elastic repricing passes so a failure never skips a
-                     # batch — membership changes the PRICE of iteration t,
-                     # never its math
+    pending = None   # monolithic replay: the in-flight (batch consumed)
+                     # step, kept across elastic repricing passes so a
+                     # failure never skips a batch — there membership
+                     # changes the PRICE of iteration t, never its math
+    cur_batch = None  # per-worker replay: the iteration's batch, kept
+                      # across repricing passes (membership changes which
+                      # SHARDS of it enter the round, never skips it)
+    # params history for bounded-staleness views: round index -> params
+    # after that round committed (-1 = the initial params).  commit_times
+    # is the CURRENT LINEAGE's commit times, index-aligned with round t —
+    # unlike res.times it is truncated on a bulk-synchronous rollback, so
+    # view selection never counts commits of an abandoned lineage
+    track_views = use_pw and stale > 0
+    phist: Dict[int, Any] = {-1: params} if track_views else {}
+    commit_times: List[float] = []
 
     t = 0
     try:
@@ -232,7 +297,12 @@ def simulate(
                     active = sorted(active + [w])
                     res.rejoins += 1
 
-            if pending is None:
+            if use_pw:
+                if cur_batch is None:
+                    cur_batch = next(it)
+                order = sm.order_for(t, state)
+                sc = sm.costs_for(t, order)
+            elif pending is None:
                 batch = next(it)
                 new_params, new_state, metrics = sm.step(t, params, state,
                                                          batch, key)
@@ -246,25 +316,63 @@ def simulate(
             slow = cluster.draw_slowdowns(rng)
             base_dt = compute.time(sc.fevals, sc.gevals)
             dts = [base_dt * float(s) for s in slow]
-            comm_time = cluster.collective_time(sc.comm_bytes, len(active))
             is_async = stale > 0 and order == 0
             if is_async:
                 idx = len(res.times) - 1 - stale
                 gate = res.times[idx] if idx >= 0 else 0.0
+            else:
+                gate = 0.0
+
+            if use_pw:
+                # per-worker replay: the live membership's rounds run with
+                # the params each worker actually has.  On a synchronous
+                # full-membership round every view is current, so the round
+                # executes through the SAME monolithic jitted program the
+                # runtime lowers (bit-identical replay); divergent views or
+                # a shrunken membership force the per-worker path.
+                views, lagged = None, False
+                if is_async:
+                    views = {}
+                    for w in active:
+                        start_w = max(clocks.t[w], gate)
+                        v = bisect.bisect_right(commit_times, start_w)
+                        if v < t:               # stale view: after round v-1
+                            views[w] = phist[v - 1]
+                            lagged = True
+                    if not lagged:
+                        views = None
+                if len(active) == cluster.m and not lagged:
+                    new_params, new_state, metrics = sm.step(
+                        t, params, state, cur_batch, key)
+                    sc = sm.costs_for(t, int(metrics["order"]))
+                    comm_bytes = sc.comm_bytes
+                else:
+                    new_params, new_state, metrics = sm.executor.run(
+                        t, params, state, cur_batch, workers=active,
+                        views=views, key=key)
+                    comm_bytes = int(metrics["comm_bytes"])
+                assert int(metrics["order"]) == order, (sm.name, t, order)
+            else:
+                comm_bytes = sc.comm_bytes
+
+            comm_time = cluster.collective_time(comm_bytes, len(active))
+            if is_async:
                 done_tent = max(max(clocks.t[i], gate) + dts[i]
                                 for i in active) + comm_time
             else:
-                gate = 0.0
                 done_tent = max(clocks.t[i] + dts[i]
                                 for i in active) + comm_time
 
             if next_fail < done_tent:
                 if cluster.elastic:
-                    # the victim leaves; survivors continue with NO rollback
-                    # (the in-flight step result is kept and repriced at the
-                    # shrunken membership on the next pass).  A failure with
-                    # one live worker left has nothing to remove and is not
-                    # counted — the failures counter matches leave events.
+                    # the victim leaves; survivors continue with NO rollback.
+                    # Monolithic replay keeps the in-flight step result and
+                    # reprices it at the shrunken membership on the next
+                    # pass; per-worker replay re-RUNS the round with the
+                    # survivors' shards only (the batch itself is never
+                    # skipped).  A failure with one live worker left has
+                    # nothing to remove and is not counted — the failures
+                    # counter matches leave events.
                     victim = active[int(rng.integers(len(active)))]
                     down = cluster.draw_downtime(rng)
                     if len(active) > 1:
@@ -273,7 +381,7 @@ def simulate(
                         rejoin_at[victim] = next_fail + down
                         # causality: the survivors only learn of the failure
                         # at next_fail (they were waiting on the victim's
-                        # barrier slot / exchange), so the repriced round
+                        # barrier slot / exchange), so the re-run round
                         # cannot start — let alone commit — before it
                         for i in active:
                             clocks.t[i] = max(clocks.t[i], next_fail)
@@ -288,6 +396,7 @@ def simulate(
                 # the restart charge
                 res.failures += 1
                 pending = None      # rollback: t changes, the step is stale
+                cur_batch = None
                 victim = int(rng.integers(cluster.m))
                 loop.record(next_fail, "fail", victim)
                 restored, rstep = ckpt_restore(
@@ -295,6 +404,12 @@ def simulate(
                     step=last_ckpt)
                 params, state = restored["params"], restored["state"]
                 t = int(rstep)
+                if track_views:
+                    # the rounds past the checkpoint belong to an abandoned
+                    # lineage: drop their commits from the view index and
+                    # resolve any staleness window to the restored params
+                    del commit_times[t:]
+                    phist = {k: params for k in range(t - 1 - stale, t)}
                 resume = next_fail + cluster.restart_time
                 loop.record(resume, "restore")
                 clocks.set_all(resume)
@@ -319,16 +434,22 @@ def simulate(
                 res.feval_s += dt_crit
             else:
                 res.geval_s += dt_crit
-            res.bytes_total += sc.comm_bytes
+            res.bytes_total += comm_bytes
             params, state = new_params, new_state
             pending = None
+            cur_batch = None
             res.steps.append(t)
             res.times.append(done)
             res.losses.append(float(metrics["loss"]))
             res.orders.append(order)
-            res.comm_bytes.append(sc.comm_bytes)
+            res.comm_bytes.append(comm_bytes)
             res.active_counts.append(len(active))
             res.feval_cum.append(res.feval_s)
+            if track_views:
+                phist[t] = params
+                for k in [k for k in phist if k < t - stale]:
+                    del phist[k]
+                commit_times.append(done)
             t += 1
 
             if use_ckpt and t % cluster.ckpt_every == 0:
@@ -369,16 +490,22 @@ def _ho_family(
     tau_schedule: Optional[Callable[[int], int]] = None,
     zo_only: bool = False,
     engine: str = "fused",
+    compress_mode: str = "per_worker",
 ) -> SimMethod:
-    """HO-SGD spectrum on the real distributed step programs (1x1 mesh,
-    ``m`` simulated workers in-program — the 0.4.x auto-sharded ZO path),
-    wrapped in a ``CommLedger`` so costs_for reads measured bytes."""
+    """HO-SGD spectrum: the round program (``rounds.ho_sgd_program``) plus
+    its monolithic lowering to the real distributed step programs (1x1
+    mesh, ``m`` simulated workers in-program — the 0.4.x auto-sharded ZO
+    path), wrapped in a ``CommLedger`` so costs_for reads measured bytes."""
     mesh = make_test_mesh(data=1, model=1)
     ho = HOSGDConfig(tau=tau, mu=mu, m=cluster.m, lr=lr, zo_lr=zo_lr,
                      seed=seed, engine=engine)
     opt = opt or sgd(const_schedule(lr))
+    wire = R.Wire(codec, compress_mode, seed=seed)
+    program = R.ho_sgd_program(loss_fn, ho, opt, name=name, wire=wire,
+                               tau_schedule=tau_schedule, zo_only=zo_only)
     ledger = CommLedger()
-    fo = make_fo_step(loss_fn, mesh, opt, compressor=codec, seed=seed)
+    fo = make_fo_step(loss_fn, mesh, opt, compressor=codec, seed=seed,
+                      compress_mode=compress_mode, m=cluster.m)
     zo = make_zo_step(loss_fn, mesh, ho, opt, m=cluster.m)
     fo_j = ledger.wrap("fo", jax.jit(fo))
     zo_j = ledger.wrap("zo", jax.jit(zo))
@@ -389,18 +516,13 @@ def _ho_family(
         return {"opt": opt.init(params), "since_fo": 0}
 
     def step(t, params, state, batch, key=None):
-        if zo_only:
-            is_fo, t_step, since = False, t, int(state["since_fo"]) + 1
-        elif tau_schedule is not None:
-            is_fo, t_step, since = adaptive_tau_decision(
-                t, int(state["since_fo"]), tau_schedule(t), tau)
-        else:
-            is_fo = t % tau == 0
-            t_step = t
-            since = 0 if is_fo else int(state["since_fo"]) + 1
+        # the monolithic lowering of program.round_for's schedule: the FO/ZO
+        # decision is the SAME host logic the round program runs
+        rstep = program.round_for(t, state)
+        is_fo = rstep.round.order == 1
         params, opt_state, loss = (fo_j if is_fo else zo_j)(
-            jnp.int32(t_step), params, state["opt"], batch)
-        return params, {"opt": opt_state, "since_fo": since}, {
+            jnp.int32(rstep.t_step), params, state["opt"], batch)
+        return params, {"opt": opt_state, **rstep.host_updates}, {
             "loss": loss, "order": 1 if is_fo else 0}
 
     def costs_for(t, order):
@@ -412,7 +534,7 @@ def _ho_family(
             return StepCost(0.0, 1.0, ledger.bytes_per_step("fo"))
         return StepCost(2.0, 0.0, ledger.bytes_per_step("zo"))
 
-    return SimMethod(name, init, step, costs_for, ledger)
+    return SimMethod(name, init, step, costs_for, ledger, program=program)
 
 
 def _averaging_baseline(
@@ -425,32 +547,44 @@ def _averaging_baseline(
     lr: float,
     mu_r: float = 0.25,
     qsgd_s: int = 8,
+    compress_mode: str = "per_worker",
 ) -> SimMethod:
     d = sum(int(x.size) for x in jax.tree.leaves(params_like))
     if which == "pa_sgd":
         meth = make_pa_sgd(loss_fn, cluster.m, tau, lr)
+    elif which == "pa_gossip":
+        meth = make_gossip_pa_sgd(loss_fn, cluster.m, tau, lr)
     elif which == "ri_sgd":
         meth = make_ri_sgd(loss_fn, cluster.m, tau, lr, mu_r=mu_r)
     elif which == "qsgd":
-        meth = make_qsgd(loss_fn, cluster.m, qsgd_s, lr)
+        meth = make_qsgd(loss_fn, cluster.m, qsgd_s, lr,
+                         compress_mode=compress_mode)
     else:
         raise ValueError(which)
 
-    # PA/RI move the model tree itself on averaging rounds — bytes measured
-    # from the live tree (the ledger's own counter), not a formula on d
+    # PA/RI move the model tree itself on averaging rounds (gossip-PA its
+    # min(2, m-1) ring neighbors' trees) — bytes measured from the live
+    # parameter tree (the ledger's own counter), not a formula on d
     model_bytes = _tree_nbytes(params_like)
-    # QSGD's wire size: the repo's one QSGD wire model (per-leaf headers)
+    sync_bytes = (model_bytes * min(2, cluster.m - 1)
+                  if which == "pa_gossip" else model_bytes)
+    # QSGD's wire size: the repo's one QSGD wire model (per-leaf headers);
+    # per-worker mode receives every active worker's code (the real
+    # protocol), legacy the historical single post-reduction payload
     qsgd_bytes = sum(compress_mod.qsgd(qsgd_s).nbytes(int(x.size))
                      for x in jax.tree.leaves(params_like))
+    if compress_mode == "per_worker":
+        qsgd_bytes *= cluster.m
 
     def costs_for(t, order):
         fe, ge = meth.fevals(d), meth.gevals(d)
         if which == "qsgd":
             return StepCost(fe, ge, qsgd_bytes)
         synced = (t + 1) % tau == 0
-        return StepCost(fe, ge, model_bytes if synced else 0)
+        return StepCost(fe, ge, sync_bytes if synced else 0)
 
-    return SimMethod(which, meth.init, meth.step, costs_for)
+    return SimMethod(which, meth.init, meth.step, costs_for,
+                     program=meth.program)
 
 
 def make_sim_methods(
@@ -468,21 +602,26 @@ def make_sim_methods(
     mu_r: float = 0.25,
     qsgd_s: int = 8,
     engine: str = "fused",
+    compress_mode: str = "per_worker",
     which: Optional[List[str]] = None,
 ) -> Dict[str, SimMethod]:
     """Build the paper's method zoo as replayable ``SimMethod``s.
 
     ``zo_lr`` defaults to the paper's ``lr * 30 / d`` scaling.  ``codec``
     (a ``repro.dist.Compressor``) compresses the HO/sync FO exchange and is
-    priced at its booked wire bytes.  ``tau_schedule`` drives
-    ``ho_sgd_adaptive`` (default: linear ramp 2 -> tau over 10*tau iters).
+    priced at its booked wire bytes — ``compress_mode`` picks the faithful
+    per-worker encode (``nbytes`` × live workers) or the legacy
+    post-reduction simulation.  ``tau_schedule`` drives ``ho_sgd_adaptive``
+    (default: linear ramp 2 -> tau over 10*tau iters).
     """
     d = sum(int(x.size) for x in jax.tree.leaves(params_like))
     zo_lr = zo_lr if zo_lr is not None else lr * 30.0 / d
     horizon = max(1, 10 * tau)
     sched = tau_schedule or (
         lambda t: int(round(2 + (tau - 2) * min(t, horizon) / horizon)))
-    kw = dict(lr=lr, mu=mu, seed=seed, engine=engine)
+    kw = dict(lr=lr, mu=mu, seed=seed, engine=engine,
+              compress_mode=compress_mode)
+    avg_kw = dict(tau=tau, lr=lr, compress_mode=compress_mode)
     builders: Dict[str, Callable[[], SimMethod]] = {
         "ho_sgd": lambda: _ho_family(
             loss_fn, cluster, name="ho_sgd", tau=tau, zo_lr=zo_lr,
@@ -497,13 +636,13 @@ def make_sim_methods(
             loss_fn, cluster, name="zo_sgd", tau=max(2, tau), zo_lr=zo_lr,
             zo_only=True, **kw),
         "pa_sgd": lambda: _averaging_baseline(
-            "pa_sgd", loss_fn, params_like, cluster, tau=tau, lr=lr),
+            "pa_sgd", loss_fn, params_like, cluster, **avg_kw),
+        "pa_gossip": lambda: _averaging_baseline(
+            "pa_gossip", loss_fn, params_like, cluster, **avg_kw),
         "ri_sgd": lambda: _averaging_baseline(
-            "ri_sgd", loss_fn, params_like, cluster, tau=tau, lr=lr,
-            mu_r=mu_r),
+            "ri_sgd", loss_fn, params_like, cluster, mu_r=mu_r, **avg_kw),
         "qsgd": lambda: _averaging_baseline(
-            "qsgd", loss_fn, params_like, cluster, tau=tau, lr=lr,
-            qsgd_s=qsgd_s),
+            "qsgd", loss_fn, params_like, cluster, qsgd_s=qsgd_s, **avg_kw),
     }
     names = which or list(builders)
     unknown = [n for n in names if n not in builders]

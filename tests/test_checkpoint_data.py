@@ -149,7 +149,13 @@ def test_elastic_rejoin_checkpoint_roundtrip_bit_exact(tmp_path):
     iterations between FO syncs), rejoins through a REAL repro.checkpoint
     round-trip, and the continued run matches a never-failed run's params
     AND method state bit-for-bit at the next FO sync — a lossy round-trip
-    (dtype width, python-scalar counters) would show up as divergence."""
+    (dtype width, python-scalar counters) would show up as divergence.
+
+    Runs under ``replay="monolithic"``, the mode whose contract is that
+    membership changes pricing only: any divergence can then ONLY come from
+    the checkpoint round-trip.  (The default per-worker replay diverges by
+    design — the live workers' shards change the math; see
+    tests/test_replay_fidelity.py.)"""
     import jax.numpy as jnp
     from repro.sim import ClusterSpec, compute_model_for, make_sim_methods, \
         simulate
@@ -169,7 +175,7 @@ def test_elastic_rejoin_checkpoint_roundtrip_bit_exact(tmp_path):
                               which=["ho_sgd"])["ho_sgd"]
         return simulate(sm, params, batches(), spec, n,
                         compute=compute_model_for(params, spec, 2),
-                        ckpt_dir=str(tmp_path))
+                        ckpt_dir=str(tmp_path), replay="monolithic")
 
     # seed 1 is pinned: exactly one worker leaves during ZO iteration t=1
     # (mid-tau-window for tau=4: FO at t=0, next FO sync at t=4) and

@@ -163,3 +163,55 @@ def test_qsgd_fo_step_records_fewer_bytes_than_dense():
     assert compressed.bytes_per_step("fo") < dense.bytes_per_step("fo") == 4 * d
     # zo traffic is untouched by the codec
     assert compressed.bytes_per_step("zo") == dense.bytes_per_step("zo")
+
+
+# --------------------------------------------------------------------------- #
+# faithful per-worker QSGD (ISSUE 5): each worker encodes its own shard
+# gradient and the reducer decodes — wire bytes = nbytes × active workers
+# --------------------------------------------------------------------------- #
+def _fo_bytes(compressor, m, compress_mode):
+    from repro.core.distributed import make_fo_step
+    mesh = make_test_mesh(data=1, model=1)
+    d = 64
+    opt = sgd(const_schedule(0.05))
+    fo = make_fo_step(quad_loss, mesh, opt, compressor=compressor,
+                      compress_mode=compress_mode, m=m)
+    ledger = CommLedger()
+    fo_j = ledger.wrap("fo", jax.jit(fo))
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    fo_j(jnp.int32(0), params, opt.init(params),
+         {"t": jnp.ones((2 * m, d), jnp.float32)})
+    return ledger.bytes_per_step("fo"), d
+
+
+@pytest.mark.parametrize("m", [1, 4])
+def test_per_worker_fo_encode_books_nbytes_times_workers(m):
+    codec = qsgd(4)
+    pw, d = _fo_bytes(codec, m, "per_worker")
+    assert pw == codec.nbytes(d) * m
+    legacy, _ = _fo_bytes(codec, m, "legacy")
+    assert legacy == codec.nbytes(d)
+    if m == 1:       # the degenerate mesh: the two protocols coincide
+        assert pw == legacy
+
+
+def test_round_executor_books_nbytes_times_active_workers():
+    """The round IR's wire model through a ledger-wrapped executor: a
+    per-worker-encoded all_reduce over the LIVE membership books
+    dist.compress.nbytes × active workers (legacy: one payload)."""
+    from repro.core.baselines import qsgd_program
+    from repro.core.rounds import RoundExecutor
+
+    d, m, s = 64, 4, 8
+    params = {"x": jnp.zeros((d,), jnp.float32)}
+    batch = {"t": jnp.ones((2 * m, d), jnp.float32)}
+    for mode, active, mult in [("per_worker", None, m),
+                               ("per_worker", [0, 2, 3], 3),
+                               ("legacy", None, 1)]:
+        ex = RoundExecutor(qsgd_program(quad_loss, m, s, 0.1,
+                                        compress_mode=mode))
+        ledger = CommLedger()
+        run = ledger.wrap("q", lambda *a, **k: ex.run(*a, **k))
+        _, _, met = run(0, params, {}, batch, workers=active)
+        expect = qsgd(s).nbytes(d) * mult
+        assert met["comm_bytes"] == expect == ledger.bytes_per_step("q")

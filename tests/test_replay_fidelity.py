@@ -1,0 +1,193 @@
+"""Replay-fidelity regression suite (ISSUE 5).
+
+The PR-4 monolithic replay could only REPRICE async/elastic scenarios — the
+step programs always computed with all m in-program workers, so the loss
+trajectory was invariant to membership and staleness.  The per-worker
+replay (the default) closes that caveat:
+
+* on a synchronous full-membership spec it is trace- AND loss-bit-identical
+  to the monolithic replay (every round runs through the SAME monolithic
+  jitted program — no new numerics on the honest path);
+* with ``elastic`` or ``max_staleness > 0`` the trajectory now measurably
+  DIVERGES from the full-W run — and the same assertions FAIL against the
+  old monolithic replay, which is pinned here too (its pricing-only
+  contract is the regression reference);
+* the live-W collective prices the payload each active worker actually
+  sent (ZO rounds book 4 × live-W bytes, faithful QSGD ``nbytes`` ×
+  live-W).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.dist.compress import qsgd
+from repro.sim import ClusterSpec, compute_model_for, make_sim_methods, simulate
+
+D, M = 48, 4
+TAU, N_ITERS = 4, 12
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def problem():
+    return {"x": jnp.zeros((D,), jnp.float32)}
+
+
+def batches():
+    i = 0
+    while True:
+        yield {"t": jnp.full((2 * M, D), 1.0 + 0.1 * (i % 7), jnp.float32)}
+        i += 1
+
+
+def run(spec, replay, which="ho_sgd", n=N_ITERS, codec=None,
+        compress_mode="per_worker"):
+    params = problem()
+    sm = make_sim_methods(quad_loss, params, spec, tau=TAU, lr=0.1,
+                          zo_lr=0.05, codec=codec,
+                          compress_mode=compress_mode,
+                          which=[which])[which]
+    return simulate(sm, params, batches(), spec, n,
+                    compute=compute_model_for(params, spec, 2), replay=replay)
+
+
+BASE = ClusterSpec(m=M, flops_per_sec=1e9, bandwidth=1e6, seed=0)
+#: deterministic heterogeneity: worker 3 is 4x slower, so under bounded
+#: staleness the fast workers genuinely run ahead (stale views realized)
+HETERO = BASE.with_(rel_speeds=(1.0, 1.0, 1.0, 0.25), max_staleness=2)
+ELASTIC = BASE.with_(elastic=True, fail_rate=5000.0, downtime=5e-5,
+                     restart_time=1e-5, jitter_sigma=0.1)
+
+
+# --------------------------------------------------------------------------- #
+# sync full membership: per-worker == monolithic, bit for bit
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("which", ["ho_sgd", "ho_sgd_adaptive", "pa_sgd",
+                                  "pa_gossip", "qsgd"])
+def test_sync_per_worker_replay_bit_identical_to_monolithic(which):
+    pw = run(BASE, "per_worker", which=which)
+    mono = run(BASE, "monolithic", which=which)
+    assert pw.trace == mono.trace
+    assert pw.losses == mono.losses
+    assert pw.comm_bytes == mono.comm_bytes
+    for a, b in zip(jax.tree.leaves(pw.params), jax.tree.leaves(mono.params)):
+        assert jnp.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# bounded staleness: stale views change the trajectory (and ONLY the
+# per-worker replay can express that)
+# --------------------------------------------------------------------------- #
+def test_staleness_diverges_per_worker_but_not_monolithic():
+    pw = run(HETERO, "per_worker")
+    mono = run(HETERO, "monolithic")
+    mono_sync = run(HETERO.with_(max_staleness=0), "monolithic")
+    # the old replay: staleness repriced, trajectory untouched — the PR-4
+    # caveat this suite regression-pins
+    assert mono.losses == mono_sync.losses
+    # the per-worker replay: fast workers evaluate at the params they
+    # actually had — the trajectory measurably diverges
+    assert pw.losses != mono.losses
+    assert any(abs(a - b) > 1e-6 for a, b in zip(pw.losses, mono.losses))
+    # pricing and event structure are a pure function of the cost models —
+    # identical across replay modes (the divergence is in the MATH)
+    assert pw.trace == mono.trace
+    assert pw.orders == mono.orders
+
+
+def test_staleness_views_survive_bulk_rollback():
+    """A bulk-synchronous failure rewinds t but NOT the committed event
+    history; view selection must index the current lineage's commits
+    (truncated on restore), or every post-rollback async round silently
+    degrades to current-params views.  Regression: stale-view divergence
+    must still be present in the rounds committed AFTER the last restore,
+    and the run stays deterministic across rollbacks."""
+    spec = HETERO.with_(fail_rate=500.0, ckpt_every=2, restart_time=1e-4,
+                        seed=3)
+    pw = run(spec, "per_worker", n=24)
+    mono = run(spec, "monolithic", n=24)
+    assert pw.failures > 0
+    assert pw.trace == mono.trace          # pricing identical either way
+    last_restore = max(t for t, k, _ in pw.trace if k == "restore")
+    post = [i for i, tm in enumerate(pw.times) if tm > last_restore]
+    assert post, "no rounds committed after the last restore"
+    assert any(pw.losses[i] != mono.losses[i] for i in post), \
+        "staleness views stopped engaging after a rollback"
+    again = run(spec, "per_worker", n=24)
+    assert pw.trace == again.trace and pw.losses == again.losses
+
+
+def test_staleness_divergence_requires_lagging_workers():
+    """Homogeneous cluster, no jitter: nobody ever lags, every view is
+    current, and the per-worker replay stays on the monolithic fast path —
+    bit-identical even with max_staleness > 0."""
+    spec = BASE.with_(max_staleness=2)
+    pw = run(spec, "per_worker")
+    mono = run(spec, "monolithic")
+    assert pw.losses == mono.losses and pw.trace == mono.trace
+
+
+# --------------------------------------------------------------------------- #
+# elastic membership: only the live workers' shards enter the round
+# --------------------------------------------------------------------------- #
+def test_elastic_diverges_per_worker_but_not_monolithic():
+    pw = run(ELASTIC, "per_worker")
+    assert pw.failures > 0 and min(pw.active_counts) < M
+    ref_spec = ELASTIC.with_(fail_rate=0.0, elastic=False)
+    # old replay: membership changed the price, never the math
+    mono = run(ELASTIC, "monolithic")
+    mono_ref = run(ref_spec, "monolithic")
+    assert mono.losses == mono_ref.losses
+    # per-worker replay: the shrunken membership genuinely changes the
+    # trajectory relative to the full-W run
+    pw_ref = run(ref_spec, "per_worker")
+    assert pw.losses != pw_ref.losses
+    assert not all(bool(jnp.array_equal(a, b))
+                   for a, b in zip(jax.tree.leaves(pw.params),
+                                   jax.tree.leaves(pw_ref.params)))
+
+
+def test_elastic_live_w_collective_prices_actual_payload():
+    """A ZO round with k live workers gathers exactly k scalars (4k bytes);
+    the monolithic replay keeps booking the full in-program m."""
+    pw = run(ELASTIC, "per_worker")
+    mono = run(ELASTIC, "monolithic")
+    shrunk = [(i, k) for i, (k, o) in
+              enumerate(zip(pw.active_counts, pw.orders))
+              if k < M and o == 0]
+    assert shrunk, "elastic spec failed to shrink membership on a ZO round"
+    for i, k in shrunk:
+        assert pw.comm_bytes[i] == 4 * k
+    i, k = shrunk[0]
+    assert mono.comm_bytes[i] == 4 * M      # the old replay's full-m booking
+
+
+def test_elastic_per_worker_replay_is_deterministic():
+    r1, r2 = run(ELASTIC, "per_worker"), run(ELASTIC, "per_worker")
+    assert r1.trace == r2.trace and r1.losses == r2.losses
+    for a, b in zip(jax.tree.leaves(r1.params), jax.tree.leaves(r2.params)):
+        assert jnp.array_equal(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# faithful QSGD through the sim: nbytes × live workers
+# --------------------------------------------------------------------------- #
+def test_sim_fo_codec_books_nbytes_times_workers():
+    codec = qsgd(4)
+    pw = run(BASE, "per_worker", codec=codec, compress_mode="per_worker")
+    legacy = run(BASE, "per_worker", codec=codec, compress_mode="legacy")
+    fo_pw = [b for b, o in zip(pw.comm_bytes, pw.orders) if o == 1]
+    fo_lg = [b for b, o in zip(legacy.comm_bytes, legacy.orders) if o == 1]
+    assert fo_pw and set(fo_pw) == {codec.nbytes(D) * M}
+    assert set(fo_lg) == {codec.nbytes(D)}
+    # ZO rounds never compressed in either mode
+    assert all(b == 4 * M for b, o in zip(pw.comm_bytes, pw.orders) if o == 0)
+
+
+def test_qsgd_baseline_books_nbytes_times_workers():
+    pw = run(BASE, "per_worker", which="qsgd")
+    legacy = run(BASE, "per_worker", which="qsgd", compress_mode="legacy")
+    assert set(pw.comm_bytes) == {qsgd(8).nbytes(D) * M}
+    assert set(legacy.comm_bytes) == {qsgd(8).nbytes(D)}

@@ -139,10 +139,23 @@ def test_hierarchical_all_reduce_closed_form(w, pods):
     assert cm.all_reduce_time(NBYTES, w) == pytest.approx(intra + ixp)
 
 
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_gossip_exchange_closed_form(w):
+    """Ring-gossip round (the round IR's neighbor_exchange): min(2, w-1)
+    sequential neighbor transfers of the full payload — independent of the
+    ring length beyond the two-neighbor degree."""
+    cm = CollectiveModel(link=LINK, kind="gossip")
+    k = min(2, w - 1)
+    expect = k * (ALPHA + NBYTES * BETA)
+    assert cm.all_reduce_time(NBYTES, w) == pytest.approx(expect)
+
+
 def test_collective_degenerate_cases():
     cm = CollectiveModel(link=LINK, kind="ring")
     assert cm.all_reduce_time(NBYTES, 1) == 0.0    # one worker: no exchange
     assert cm.all_reduce_time(0, 8) == 0.0         # no bytes: no time
+    gm = CollectiveModel(link=LINK, kind="gossip")
+    assert gm.all_reduce_time(NBYTES, 1) == 0.0
 
 
 def _sim_quad(spec, n_iters=8, tau=4):
@@ -165,6 +178,7 @@ def _sim_quad(spec, n_iters=8, tau=4):
 @pytest.mark.parametrize("spec_kw", [
     dict(collective="ring"),
     dict(collective="tree"),
+    dict(collective="gossip"),
     dict(collective="ring",
          topology=Topology(pods=2, inter_alpha=1e-3, inter_bandwidth=1e5)),
 ])

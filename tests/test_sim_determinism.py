@@ -34,7 +34,7 @@ def quad_problem():
     return params, batch
 
 
-def run(spec, which="ho_sgd"):
+def run(spec, which="ho_sgd", replay="per_worker"):
     params, batch = quad_problem()
 
     def batches():
@@ -44,7 +44,8 @@ def run(spec, which="ho_sgd"):
     sm = make_sim_methods(quad_loss, params, spec, tau=TAU, lr=0.1,
                           zo_lr=0.05, which=[which])[which]
     compute = compute_model_for(params, spec, 2)
-    return simulate(sm, params, batches(), spec, N_ITERS, compute=compute)
+    return simulate(sm, params, batches(), spec, N_ITERS, compute=compute,
+                    replay=replay)
 
 
 def random_base_spec(case_seed: int) -> ClusterSpec:
@@ -85,11 +86,12 @@ def scenario(base: ClusterSpec, name: str) -> ClusterSpec:
 SCENARIOS = ["sync", "async2", "elastic", "2pod_ring"]
 
 
+@pytest.mark.parametrize("replay", ["per_worker", "monolithic"])
 @pytest.mark.parametrize("case_seed", [11, 29])
 @pytest.mark.parametrize("name", SCENARIOS)
-def test_same_spec_bit_identical_trace(case_seed, name):
+def test_same_spec_bit_identical_trace(case_seed, name, replay):
     spec = scenario(random_base_spec(case_seed), name)
-    r1, r2 = run(spec), run(spec)
+    r1, r2 = run(spec, replay=replay), run(spec, replay=replay)
     assert r1.trace == r2.trace           # bit-identical, floats included
     assert r1.times == r2.times
     assert r1.losses == r2.losses
@@ -117,11 +119,14 @@ def test_elastic_scenario_exercises_leave_and_rejoin():
     assert min(res.active_counts) < QUAD_M
 
 
-def test_elastic_failure_never_skips_a_batch():
-    """Membership changes the PRICE of an iteration, never its math: with a
-    batch stream that differs every iteration, an elastic run's committed
-    params must still match the never-failed run bit-for-bit (a failure that
-    dropped the in-flight batch would diverge immediately)."""
+def test_monolithic_elastic_failure_never_skips_a_batch():
+    """The MONOLITHIC replay's contract: membership changes the PRICE of an
+    iteration, never its math — with a batch stream that differs every
+    iteration, an elastic run's committed params must still match the
+    never-failed run bit-for-bit (a failure that dropped the in-flight
+    batch would diverge immediately).  The default per-worker replay
+    intentionally breaks this equality — only the live workers' shards
+    enter the round — which is pinned by tests/test_replay_fidelity.py."""
     params, _ = quad_problem()
 
     def batches():
@@ -135,7 +140,8 @@ def test_elastic_failure_never_skips_a_batch():
         sm = make_sim_methods(quad_loss, params, spec, tau=TAU, lr=0.1,
                               zo_lr=0.05, which=["ho_sgd"])["ho_sgd"]
         return simulate(sm, params, batches(), spec, N_ITERS,
-                        compute=compute_model_for(params, spec, 2))
+                        compute=compute_model_for(params, spec, 2),
+                        replay="monolithic")
 
     elastic = scenario(random_base_spec(11), "elastic")
     res = go(elastic)
