@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
   sim     — time-to-target-loss frontier on the simulated cluster
             (tau/m/straggler/topology axes plus the compress-mode axis:
             per-worker vs legacy QSGD wire accounting)
+  serve   — serving frontier: continuous batching vs the seed synchronous
+            batch path under open-loop Poisson traffic (slots x rate x
+            arch; tok/s + p50/p99 TTFT/latency, BENCH_serve.json)
 
 ``--quick`` trims iteration counts for CI-speed runs.
 """
@@ -25,11 +28,11 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     choices=["table1", "fig1", "fig2", "kernels", "roofline",
-                             "tau", "comm", "sim"])
+                             "tau", "comm", "sim", "serve"])
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args(argv)
     sections = args.only or ["table1", "comm", "kernels", "fig1", "fig2",
-                             "tau", "sim", "roofline"]
+                             "tau", "sim", "serve", "roofline"]
     failed = []
 
     for sec in sections:
@@ -74,6 +77,9 @@ def main(argv=None):
             elif sec == "sim":
                 from benchmarks import sim_frontier
                 sim_frontier.main(["--smoke"] if args.quick else [])
+            elif sec == "serve":
+                from benchmarks import serve_bench
+                serve_bench.main(["--smoke"] if args.quick else [])
         except Exception:
             failed.append(sec)
             traceback.print_exc()

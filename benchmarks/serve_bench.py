@@ -1,0 +1,108 @@
+"""Serving frontier: continuous batching vs the seed synchronous batch path.
+
+Sweeps KV-cache slots x open-loop arrival rate x architecture on a seeded
+Poisson workload (``repro.sim.traffic``), pricing every scheduler step with
+the training-side ``ComputeModel`` — the serving half of the repo's
+time-to-X story.  For every cell the REAL continuous-batching engine
+(actual tokens generated) is compared against the priced seed synchronous
+batch path on the SAME arrival trace, and the run asserts the acceptance
+ordering: continuous batching clears strictly more tokens/sec on the mixed
+open-loop workload.  Emits root-level ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import Engine, ServeConfig
+from repro.sim.traffic import (
+    TrafficSpec,
+    replay,
+    replay_seed_sync,
+    serve_compute_model,
+)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cell(cfg, params, spec: TrafficSpec, slots: int, flops: float):
+    cm = serve_compute_model(cfg, flops_per_sec=flops)
+    eng = Engine(cfg, params,
+                 ServeConfig(max_seq=spec.required_max_seq(), slots=slots))
+    cont = replay(eng, spec, cm)
+    sync = replay_seed_sync(spec, cm, batch=slots)
+    return cont, sync
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
+    ap.add_argument("--archs", nargs="*", default=None)
+    ap.add_argument("--slots", nargs="*", type=int, default=None)
+    ap.add_argument("--rates", nargs="*", type=float, default=None)
+    ap.add_argument("--mix", default="mixed")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--flops-per-sec", type=float, default=1e9)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
+    args = ap.parse_args(argv)
+
+    archs = args.archs or (["qwen3-14b"] if args.smoke
+                           else ["qwen3-14b", "gemma2-2b"])
+    slots_axis = args.slots or ([2, 4] if args.smoke else [2, 4, 8])
+    rates = args.rates or ([100.0, 400.0] if args.smoke
+                           else [50.0, 100.0, 400.0, 1600.0])
+    n_req = args.requests or (16 if args.smoke else 48)
+
+    rows = []
+    orderings = {}
+    print("arch,slots,rate,engine,tok_per_sec,p50_ttft_ms,p99_ttft_ms,"
+          "p50_latency_ms,p99_latency_ms,makespan_s")
+    for arch in archs:
+        cfg = get_config(arch).reduced().with_(remat=False)
+        params = T.init_model(jax.random.key(args.seed), cfg)
+        for slots in slots_axis:
+            for rate in rates:
+                spec = TrafficSpec.from_mix(
+                    rate=rate, n_requests=n_req, mix=args.mix,
+                    seed=args.seed, vocab=cfg.vocab_size)
+                cont, sync = run_cell(cfg, params, spec, slots,
+                                      args.flops_per_sec)
+                for name, res in (("continuous", cont), ("seed_sync", sync)):
+                    s = res.summary
+                    rows.append(dict(
+                        arch=arch, slots=slots, rate=rate, engine=name,
+                        mix=args.mix, **s))
+                    print(f"{arch},{slots},{rate},{name},"
+                          f"{s['tok_per_sec']:.2f},"
+                          f"{s['p50_ttft_s']*1e3:.2f},{s['p99_ttft_s']*1e3:.2f},"
+                          f"{s['p50_latency_s']*1e3:.2f},"
+                          f"{s['p99_latency_s']*1e3:.2f},{s['makespan_s']:.4f}")
+                key = f"continuous_beats_sync[{arch},slots={slots},rate={rate}]"
+                ok = (cont.summary["tok_per_sec"] >
+                      sync.summary["tok_per_sec"])
+                orderings[key] = bool(ok)
+                assert ok, f"acceptance ordering violated: {key}"
+
+    payload = dict(
+        bench="serve",
+        config=dict(smoke=args.smoke, archs=archs, slots=slots_axis,
+                    rates=rates, mix=args.mix, requests=n_req,
+                    flops_per_sec=args.flops_per_sec, seed=args.seed,
+                    out=args.out),
+        orderings=orderings,
+        rows=rows,
+    )
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows; "
+          f"{sum(orderings.values())}/{len(orderings)} orderings hold)")
+
+
+if __name__ == "__main__":
+    main()

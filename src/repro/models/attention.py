@@ -192,10 +192,19 @@ def attention_decode(
 ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """One-token decode against a KV cache; writes the new k/v at ``pos``.
 
+    ``pos`` may be a scalar (the whole batch sits at one position — the seed
+    synchronous path) or a ``(B,)`` vector (the serving slot pool, where every
+    slot decodes at its own position; ``pos == -1`` marks an inactive slot:
+    nothing is written and the causal mask blanks every read).
+
     When every layer shares one static window, ``static_window`` lets us read
     only the last ``W`` cache slots (a dynamic_slice) instead of streaming the
     whole cache — this is what makes windowed decode sub-linear in cache size.
+    (Scalar-``pos`` only; the per-slot path masks the window via relative
+    positions instead, since slots sit at different offsets.)
     """
+    if jnp.ndim(pos) > 0:
+        return _attention_decode_slots(cfg, p, x, cache, pos, window)
     k_cache, v_cache = cache
     S = k_cache.shape[1]
     positions = jnp.full((1,), pos, jnp.int32)
@@ -217,5 +226,37 @@ def attention_decode(
     # beyond-pos slots are masked by the causal rel>=0 test (q position == pos)
     out = _attend(
         cfg, q, k_read, v_read, positions, k_positions, window, causal=True
+    )
+    return out @ p["wo"], (k_cache, v_cache)
+
+
+def _attention_decode_slots(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                        # (B, 1, D) current token per slot
+    cache: Tuple[jax.Array, jax.Array],  # k,v (B, S, KV, hd)
+    pos: jax.Array,                      # (B,) int32 per-slot position, -1 = inactive
+    window: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Per-slot decode: each batch row writes/reads at its OWN position.
+
+    The write is a masked select (one row of the length-S axis per slot)
+    rather than a dynamic_update_slice, because start indices differ per
+    row; inactive slots (``pos == -1``) match no row and write nothing.
+    Reads stream the full cache — the causal test ``q_pos - k_pos >= 0``
+    limits each slot to its own live prefix, and the sliding window (when
+    configured) is enforced by the same relative-position mask."""
+    k_cache, v_cache = cache
+    S = k_cache.shape[1]
+    positions = pos[:, None].astype(jnp.int32)           # (B, 1) q positions
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    q = _constrain_hd(q)
+    write = (jnp.arange(S, dtype=jnp.int32)[None, :] == positions)[..., None, None]
+    k_cache = jnp.where(write, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(write, v_new.astype(v_cache.dtype), v_cache)
+    k_positions = jnp.arange(S, dtype=jnp.int32)
+    out = _attend(
+        cfg, q, _constrain_hd(k_cache), _constrain_hd(v_cache),
+        positions, k_positions, window, causal=True,
     )
     return out @ p["wo"], (k_cache, v_cache)

@@ -344,8 +344,60 @@ def decode_step(cfg: ModelConfig, params: Params, token: jax.Array, pos, caches:
     return logits, new_caches
 
 
+def decode_step_slots(cfg: ModelConfig, params: Params, tokens: jax.Array,
+                      pos: jax.Array, caches: Dict):
+    """One decode step over a slot pool: every row at its OWN position.
+
+    tokens (B,) int32 (row b's current token), pos (B,) int32 (row b's
+    position; -1 = inactive slot — nothing written, logits are don't-care);
+    returns (logits (B, V), caches).  This is the continuous-batching decode
+    program: the batch axis is the KV-cache slot pool, and admission/eviction
+    only change ``tokens``/``pos``, never the jitted program's shapes.
+    """
+    scale = math.sqrt(cfg.d_model)
+    h = jnp.take(params["embed"], tokens, axis=0)[:, None, :] * scale  # (B,1,D)
+    windows = windows_array(cfg)
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(x, xs):
+        lp, win, cache_l = xs
+        x, new_cache = _block_decode(cfg, lp, x, pos, cache_l, win)
+        return x, new_cache
+
+    h, new_caches = jax.lax.scan(
+        body, h, (params["layers"], windows, caches), unroll=_unroll(cfg))
+    logits = compute_logits(cfg, params, h)[:, 0]
+    return logits, new_caches
+
+
 def prefill(cfg: ModelConfig, params: Params, batch: Dict):
     """Process the prompt, returning last-position logits and filled caches."""
+    h, caches = _prefill_hidden(cfg, params, batch)
+    logits = compute_logits(cfg, params, h[:, -1:, :])[:, 0]
+    return logits, caches
+
+
+def prefill_at(cfg: ModelConfig, params: Params, batch: Dict, last_idx: jax.Array):
+    """Prefill over a (possibly right-padded) prompt rectangle, returning the
+    logits at per-row position ``last_idx`` (B,) int32 — the last REAL prompt
+    token — and the filled caches.
+
+    This is the bucketed-prefill target: prompts are right-padded to a fixed
+    bucket length so one jitted executable serves every prompt in the bucket,
+    and causal attention guarantees positions <= last_idx never see the pad
+    tail.  (Attention-only configs; an SSM's post-prompt state integrates the
+    whole sequence, so SSM/hybrid prefills must run at exact length where
+    ``last_idx`` is simply the final position.)
+    """
+    h, caches = _prefill_hidden(cfg, params, batch)
+    h_last = jnp.take_along_axis(
+        h, last_idx.astype(jnp.int32)[:, None, None], axis=1)  # (B, 1, D)
+    logits = compute_logits(cfg, params, h_last)[:, 0]
+    return logits, caches
+
+
+def _prefill_hidden(cfg: ModelConfig, params: Params, batch: Dict):
+    """Shared prefill scan: full-sequence hidden states + per-layer caches."""
     h = embed_batch(cfg, params, batch)
     windows = windows_array(cfg)
 
@@ -378,8 +430,7 @@ def prefill(cfg: ModelConfig, params: Params, batch: Dict):
 
     h, caches = jax.lax.scan(
         body_cache, h, (params["layers"], windows), unroll=_unroll(cfg))
-    logits = compute_logits(cfg, params, h[:, -1:, :])[:, 0]
-    return logits, caches
+    return h, caches
 
 
 def _mamba_tail_state(cfg: ModelConfig, mp: Params, xn: jax.Array):

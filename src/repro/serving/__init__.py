@@ -1,1 +1,20 @@
+"""repro.serving — continuous-batching inference over a slotted KV cache.
+
+  * ``cache``     — ``SlotKVCache``: fixed pool of max_seq-length slots
+                    (alloc/assign/evict/gather; decode = the whole pool).
+  * ``scheduler`` — FIFO admission, prefill-length buckets with cached
+                    jitted executables, mid-decode admission, EOS/max_new
+                    retirement, canonical per-(request, step) sampling keys.
+  * ``engine``    — ``Engine``: offline ``generate`` (seed signature) plus
+                    the open-loop ``submit``/``step`` surface that
+                    ``repro.sim.traffic`` prices under Poisson arrivals.
+"""
+from repro.serving.cache import SlotKVCache  # noqa: F401
 from repro.serving.engine import Engine, ServeConfig, serve_step  # noqa: F401
+from repro.serving.scheduler import (  # noqa: F401
+    Request,
+    Scheduler,
+    StepReport,
+    default_buckets,
+    sample_key,
+)

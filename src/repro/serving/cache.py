@@ -1,0 +1,120 @@
+"""Slotted KV cache: a fixed pool of ``max_seq``-length cache slots.
+
+The pool is one device-resident cache tree (``T.init_caches`` over
+``slots`` batch rows); a request owns exactly one slot from admission to
+retirement.  ``alloc``/``evict`` manage the host-side free list, ``assign``
+scatters a single-request prefill cache into its slot, and the decode batch
+is simply the whole pool driven with a per-slot position vector (``-1`` for
+free slots) — so admission and eviction never change the jitted decode
+program's shapes.  ``gather`` pulls per-slot views back out for inspection
+and tests.
+
+Slots are the fixed-``max_seq`` special case of a paged cache (the seed
+engine already padded every cache to ``max_seq``); a paged-block allocator
+can later replace the slot axis behind the same alloc/assign/evict surface.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _scatter_slot(pool: Dict, prefill: Dict, slot) -> Dict:
+    """Write a B=1 prefill cache tree into pool row ``slot``.
+
+    Cache leaves are layer-stacked ``(L, B, ...)``; the slot axis is axis 1.
+    One executable per prefill shape (i.e. per bucket length) — the slot
+    index stays dynamic so re-assignment never recompiles.
+    """
+    def upd(p, c):
+        start = (0, slot) + (0,) * (p.ndim - 2)
+        return jax.lax.dynamic_update_slice(p, c.astype(p.dtype), start)
+
+    return jax.tree.map(upd, pool, prefill)
+
+
+class SlotKVCache:
+    """Fixed pool of ``slots`` KV-cache rows, each ``max_seq`` long."""
+
+    def __init__(self, cfg: ModelConfig, slots: int, max_seq: int):
+        assert slots >= 1 and max_seq >= 1
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.caches: Dict = T.init_caches(
+            cfg, slots, max_seq, jnp.dtype(cfg.dtype))
+        self._free: List[int] = list(range(slots - 1, -1, -1))  # pop() -> 0 first
+        # host-side per-slot metadata: next write position (-1 = free slot)
+        self.pos = np.full((slots,), -1, np.int64)
+        self.owner = np.full((slots,), -1, np.int64)   # request id, -1 = free
+
+    # ------------------------------------------------------------------ #
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def live_slots(self) -> List[int]:
+        return [s for s in range(self.slots) if self.owner[s] >= 0]
+
+    def alloc(self, rid: int) -> Optional[int]:
+        """Claim a free slot for request ``rid`` (None when the pool is full)."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        assert self.owner[slot] < 0, f"slot {slot} double-allocated"
+        self.owner[slot] = rid
+        return slot
+
+    def assign(self, slot: int, prefill_caches: Dict, prompt_len: int) -> None:
+        """Install a request's prefill cache (B=1 tree, any bucket length
+        <= max_seq) into ``slot``; decode continues at ``prompt_len``."""
+        assert self.owner[slot] >= 0, f"assign to unallocated slot {slot}"
+        assert 0 < prompt_len <= self.max_seq
+        self.caches = _scatter_slot(
+            self.caches, prefill_caches, jnp.int32(slot))
+        self.pos[slot] = prompt_len
+
+    def advance(self, slot: int) -> None:
+        """One decode token written at ``pos[slot]``; bump the position."""
+        assert self.owner[slot] >= 0
+        self.pos[slot] += 1
+        assert self.pos[slot] <= self.max_seq, "slot overran max_seq"
+
+    def evict(self, slot: int) -> None:
+        """Retire the slot's request and return the slot to the free pool.
+
+        The cache rows are NOT zeroed: the next ``assign`` overwrites the
+        prompt region and decode overwrites (then reads) strictly position
+        by position, so stale rows are never attended.
+        """
+        assert self.owner[slot] >= 0, f"evict of free slot {slot}"
+        self.owner[slot] = -1
+        self.pos[slot] = -1
+        self._free.append(slot)
+
+    def gather(self, slots) -> Dict:
+        """Per-slot cache views (packed along axis 1) for the given slots."""
+        idx = jnp.asarray(list(slots), jnp.int32)
+        return jax.tree.map(lambda c: jnp.take(c, idx, axis=1), self.caches)
+
+    def pos_vector(self) -> np.ndarray:
+        """(slots,) int32 positions for ``decode_step_slots``; -1 = inactive."""
+        return self.pos.astype(np.int32)
+
+    def check_invariants(self) -> None:
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        for s in range(self.slots):
+            if s in free:
+                assert self.owner[s] < 0 and self.pos[s] < 0
+            else:
+                assert self.owner[s] >= 0, f"slot {s} neither free nor owned"
+                assert 0 < self.pos[s] <= self.max_seq

@@ -1,84 +1,72 @@
-"""Batched serving engine: prefill + greedy/temperature decode with KV cache.
+"""Serving engine: a thin driver over the continuous-batching scheduler.
 
-``serve_step`` (one token against a full-length cache) is the function the
-decode-shape dry-runs lower; ``generate`` drives it for real batched
-requests with left-padded prompts.
+``Engine.generate`` keeps the seed signature (offline: submit every prompt,
+drain the scheduler, return full sequences) but now runs the slotted
+continuous-batching path: per-request bucketed prefill, one jitted decode
+program over the slot pool, EOS honored (``ServeConfig.eos_id``), and the
+drain loop exits as soon as every request retires instead of always paying
+``max_new`` steps.  ``Engine.submit``/``Engine.step`` expose the open-loop
+surface that ``repro.sim.traffic`` replays under Poisson arrivals.
+
+``serve_step`` (one token against a full-length cache) remains the
+decode-shape dry-run target.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-
-
-@dataclass
-class ServeConfig:
-    max_seq: int
-    temperature: float = 0.0
-    eos_id: int = -1          # disabled by default (synthetic vocabularies)
+from repro.serving.scheduler import (  # noqa: F401  (re-exported surface)
+    Request,
+    Scheduler,
+    ServeConfig,
+    StepReport,
+    sample_key,
+)
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
-        assert not cfg.encoder_only, "encoder-only models don't decode"
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 key: Optional[jax.Array] = None):
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
-        self._decode = jax.jit(
-            lambda p, tok, pos, caches: T.decode_step(cfg, p, tok, pos, caches)
-        )
-        self._prefill = jax.jit(lambda p, batch: T.prefill(cfg, p, batch))
+        self.scheduler = Scheduler(cfg, params, serve_cfg, key=key)
 
-    def _pad_prompts(self, prompts: List[List[int]]):
-        """Right-align prompts into a rectangle (left padding with token 0)."""
-        B = len(prompts)
-        L = max(len(p) for p in prompts)
-        toks = np.zeros((B, L), np.int32)
-        for i, p in enumerate(prompts):
-            toks[i, L - len(p):] = p
-        return jnp.asarray(toks), L
+    # --- open-loop surface (used by sim.traffic) ----------------------- #
+    def submit(self, prompt: List[int], max_new: int,
+               key_id: Optional[int] = None) -> int:
+        return self.scheduler.submit(prompt, max_new, key_id=key_id)
 
+    def step(self) -> StepReport:
+        return self.scheduler.step()
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def result(self, rid: int) -> List[int]:
+        req = self.scheduler.requests[rid]
+        return list(req.prompt) + list(req.out)
+
+    # --- offline driver (the seed surface) ------------------------------ #
     def generate(self, prompts: List[List[int]], max_new: int,
                  key: Optional[jax.Array] = None) -> List[List[int]]:
-        cfg, sc = self.cfg, self.sc
-        toks, L = self._pad_prompts(prompts)
-        B = toks.shape[0]
-        S = sc.max_seq
-        assert L + max_new <= S, "max_seq too small"
-        # prefill over the prompt, then pad caches out to max_seq
-        batch: Dict = {"tokens": toks}
-        logits, caches = self._prefill(self.params, batch)
-        caches = jax.tree.map(
-            lambda c: jnp.pad(
-                c, [(0, 0), (0, 0), (0, S - c.shape[2]), (0, 0), (0, 0)]
-            ) if c.ndim == 5 and c.shape[2] == L else c,
-            caches,
-        )
-        out = [list(p) for p in prompts]
-        tok = self._sample(logits, key, 0)
-        for step in range(max_new):
-            for i in range(B):
-                out[i].append(int(tok[i]))
-            if step == max_new - 1:
-                break
-            pos = jnp.int32(L + step)
-            logits, caches = self._decode(self.params, tok, pos, caches)
-            key = jax.random.fold_in(key, step) if key is not None else None
-            tok = self._sample(logits, key, step + 1)
-        return out
+        """Submit every prompt, drain, return prompt+generated per request.
 
-    def _sample(self, logits: jax.Array, key, step: int) -> jax.Array:
-        if self.sc.temperature <= 0 or key is None:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(
-            jax.random.fold_in(key, step), logits / self.sc.temperature
-        ).astype(jnp.int32)
+        ``key_id`` is the position in ``prompts``, so repeated calls on one
+        engine with the same ``key`` resample identically (the scheduler's
+        global rid counter keeps advancing, the sampling keys don't).
+        """
+        self.scheduler.key = key
+        rids = [self.scheduler.submit(list(p), max_new, key_id=i)
+                for i, p in enumerate(prompts)]
+        while self.scheduler.has_work:
+            self.scheduler.step()
+        return [self.result(rid) for rid in rids]
 
 
 def serve_step(cfg: ModelConfig, params, token, pos, caches):

@@ -1,0 +1,208 @@
+"""Continuous-batching scheduler over the slotted KV cache.
+
+JetStream/``OfflineInference``-style structure: a FIFO admission queue,
+prefill-length bucketing with one cached jitted prefill executable per
+bucket, admission of new requests into free slots *mid-decode*, retirement
+on EOS or ``max_new``, and ONE jitted ``decode_step_slots`` program over the
+packed slot pool (per-slot positions, ``-1`` marking free slots) whose
+shapes never change as requests come and go.
+
+One ``step()`` = (admit as many queued requests as there are free slots,
+each paying a bucketed prefill) + (one decode step over the live pool).
+``StepReport`` records exactly what a cost model needs to price the step:
+per-admission bucket lengths and the live-slot count — ``repro.sim.traffic``
+turns those into simulated seconds via the training-side ``ComputeModel``.
+
+Sampling keys: the canonical derivation is per (request, token index) —
+``sample_key(base, key_id, step)`` with ``fold_in`` applied once per
+component (the seed engine folded the step counter twice: ``generate``
+folded ``key`` per step and ``_sample`` folded the same counter again).
+Because the key never depends on the slot or on which step() admitted the
+request, temperature>0 decoding is reproducible under continuous batching
+regardless of admission order or pool packing.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serving.cache import SlotKVCache
+
+
+@dataclass
+class ServeConfig:
+    max_seq: int
+    temperature: float = 0.0
+    eos_id: int = -1          # disabled by default (synthetic vocabularies)
+    slots: int = 8            # KV-cache pool size == max decode batch
+    # prefill bucket lengths (sorted). None = auto: powers of two up to
+    # max_seq for attention-only configs, exact-length (no padding) for
+    # SSM/hybrid configs whose post-prompt state would integrate the pad tail.
+    buckets: Optional[Tuple[int, ...]] = None
+
+
+def default_buckets(max_seq: int) -> Tuple[int, ...]:
+    bs: List[int] = []
+    b = 8
+    while b < max_seq:
+        bs.append(b)
+        b *= 2
+    bs.append(max_seq)
+    return tuple(bs)
+
+
+def sample_key(base: jax.Array, key_id: int, step: int) -> jax.Array:
+    """THE per-(request, token-index) sampling key. One fold per component."""
+    return jax.random.fold_in(jax.random.fold_in(base, key_id), step)
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    key_id: int               # sampling-key identity (defaults to rid)
+    out: List[int] = field(default_factory=list)   # generated tokens
+    done: bool = False
+    slot: int = -1            # live slot while decoding, -1 otherwise
+
+
+@dataclass
+class StepReport:
+    """What one scheduler step did — the pricing interface for sim.traffic."""
+    admitted: List[Tuple[int, int, int]]   # (rid, prompt_len, bucket_len)
+    live: int                              # slots live for the decode step
+    emitted: List[Tuple[int, int]]         # (rid, token) appended this step
+    finished: List[Tuple[int, str]]        # (rid, phase) retired this step,
+                                           # phase: "prefill" | "decode"
+
+
+class Scheduler:
+    def __init__(self, cfg: ModelConfig, params, sc: ServeConfig,
+                 key: Optional[jax.Array] = None):
+        assert not cfg.encoder_only, "encoder-only models don't decode"
+        assert sc.slots >= 1
+        self.cfg = cfg
+        self.params = params
+        self.sc = sc
+        self.key = key
+        self.pool = SlotKVCache(cfg, sc.slots, sc.max_seq)
+        self.queue: Deque[Request] = deque()
+        self.requests: Dict[int, Request] = {}
+        self._next_rid = 0
+        self._exact = cfg.has_ssm   # pad tokens would corrupt the SSM state
+        self._buckets = (None if self._exact else
+                         tuple(sorted(sc.buckets or default_buckets(sc.max_seq))))
+        # one jax.jit instance per bucket length => one cached executable per
+        # bucket, inspectable via .prefill_buckets()
+        self._prefill_exec: Dict[int, Callable] = {}
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: T.decode_step_slots(cfg, p, tok, pos, caches))
+        self._slot_tokens = np.zeros((sc.slots,), np.int32)
+
+    # ------------------------------------------------------------------ #
+    def submit(self, prompt: List[int], max_new: int,
+               key_id: Optional[int] = None) -> int:
+        assert len(prompt) >= 1 and max_new >= 1
+        assert len(prompt) + max_new <= self.sc.max_seq, "max_seq too small"
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, list(prompt), max_new,
+                      rid if key_id is None else key_id)
+        self.requests[rid] = req
+        self.queue.append(req)
+        return rid
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.pool.live_slots())
+
+    def prefill_buckets(self) -> Tuple[int, ...]:
+        """Bucket lengths with a compiled prefill executable so far."""
+        return tuple(sorted(self._prefill_exec))
+
+    def bucket_for(self, prompt_len: int) -> int:
+        if self._exact:
+            return prompt_len
+        for b in self._buckets:
+            if b >= prompt_len:
+                return b
+        raise AssertionError(f"prompt_len {prompt_len} > max_seq bucket")
+
+    # ------------------------------------------------------------------ #
+    def _prefill(self, bucket: int):
+        fn = self._prefill_exec.get(bucket)
+        if fn is None:
+            cfg = self.cfg
+            fn = jax.jit(
+                lambda p, toks, last: T.prefill_at(cfg, p, {"tokens": toks}, last))
+            self._prefill_exec[bucket] = fn
+        return fn
+
+    def _sample(self, logits: jax.Array, key_id: int, step: int) -> int:
+        if self.sc.temperature <= 0 or self.key is None:
+            return int(jnp.argmax(logits))
+        k = sample_key(self.key, key_id, step)
+        return int(jax.random.categorical(k, logits / self.sc.temperature))
+
+    def _append(self, req: Request, tok: int, report: StepReport,
+                phase: str) -> bool:
+        """Record one generated token; returns True when the request retires."""
+        req.out.append(tok)
+        report.emitted.append((req.rid, tok))
+        eos = self.sc.eos_id >= 0 and tok == self.sc.eos_id
+        if eos or len(req.out) >= req.max_new:
+            req.done = True
+            report.finished.append((req.rid, phase))
+            if req.slot >= 0:
+                self.pool.evict(req.slot)
+                req.slot = -1
+            return True
+        return False
+
+    def step(self) -> StepReport:
+        """Admit into free slots, then one decode step over the live pool."""
+        report = StepReport([], 0, [], [])
+        # --- admission: bucketed prefill straight into a free slot -------- #
+        while self.queue and self.pool.free_slots:
+            req = self.queue.popleft()
+            L = len(req.prompt)
+            bucket = self.bucket_for(L)
+            toks = np.zeros((1, bucket), np.int32)
+            toks[0, :L] = req.prompt
+            logits, caches = self._prefill(bucket)(
+                self.params, jnp.asarray(toks), jnp.asarray([L - 1], jnp.int32))
+            report.admitted.append((req.rid, L, bucket))
+            tok = self._sample(logits[0], req.key_id, 0)
+            slot = self.pool.alloc(req.rid)
+            self.pool.assign(slot, caches, L)
+            req.slot = slot
+            if not self._append(req, tok, report, "prefill"):
+                self._slot_tokens[slot] = tok
+        # --- one decode step over the packed live pool -------------------- #
+        live = self.pool.live_slots()
+        report.live = len(live)
+        if live:
+            pos = self.pool.pos_vector()
+            logits, self.pool.caches = self._decode(
+                self.params, jnp.asarray(self._slot_tokens),
+                jnp.asarray(pos), self.pool.caches)
+            if self.sc.temperature <= 0 or self.key is None:
+                toks = np.asarray(jnp.argmax(logits, axis=-1))
+            else:
+                toks = None
+            for slot in live:
+                req = self.requests[int(self.pool.owner[slot])]
+                self.pool.advance(slot)   # the decode wrote req's token at pos
+                tok = (int(toks[slot]) if toks is not None else
+                       self._sample(logits[slot], req.key_id, len(req.out)))
+                if not self._append(req, tok, report, "decode"):
+                    self._slot_tokens[slot] = tok
+        return report

@@ -23,6 +23,11 @@ algebra.
     bounded staleness change the trajectory, not just the price;
     ``replay="monolithic"`` keeps the pricing-only PR-4 behavior) and
     emits loss-vs-simulated-seconds traces.
+  * ``traffic`` — open-loop serving workloads: seeded Poisson arrivals
+    with prompt/output-length mixes replayed against the REAL
+    ``repro.serving`` scheduler, each step priced by ``ComputeModel``
+    (prefill = bucket tokens, decode = live slots), emitting tokens/sec
+    and p50/p99 TTFT/latency under the same determinism contract.
 """
 from repro.sim.cluster import (  # noqa: F401
     ClusterSpec,
@@ -54,4 +59,13 @@ from repro.sim.runner import (  # noqa: F401
     compute_model_for,
     make_sim_methods,
     simulate,
+)
+from repro.sim.traffic import (  # noqa: F401
+    MIXES,
+    TrafficResult,
+    TrafficSpec,
+    poisson_trace,
+    replay,
+    replay_seed_sync,
+    serve_compute_model,
 )

@@ -1,0 +1,92 @@
+"""VERBATIM reference copy of the SEED serving engine (pre-ISSUE-6).
+
+The continuous-batching engine is pinned token-identical to this synchronous
+path at temperature 0 (same pattern as the PR-2 program references in
+test_rounds_equivalence.py).  Classes are renamed ``Seed*``; nothing else
+may change.  Note the two seed bugs this copy preserves on purpose:
+``eos_id`` is dead (never checked) and the sampling path folds the step
+counter twice (``generate`` folds ``key`` per step and ``_sample`` folds
+again) — the rewrite fixes both, so temperature>0 outputs are NOT expected
+to match, only the temperature-0 token streams are.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class SeedServeConfig:
+    max_seq: int
+    temperature: float = 0.0
+    eos_id: int = -1          # disabled by default (synthetic vocabularies)
+
+
+class SeedEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: SeedServeConfig):
+        assert not cfg.encoder_only, "encoder-only models don't decode"
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        self._decode = jax.jit(
+            lambda p, tok, pos, caches: T.decode_step(cfg, p, tok, pos, caches)
+        )
+        self._prefill = jax.jit(lambda p, batch: T.prefill(cfg, p, batch))
+
+    def _pad_prompts(self, prompts: List[List[int]]):
+        """Right-align prompts into a rectangle (left padding with token 0)."""
+        B = len(prompts)
+        L = max(len(p) for p in prompts)
+        toks = np.zeros((B, L), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, L - len(p):] = p
+        return jnp.asarray(toks), L
+
+    def generate(self, prompts: List[List[int]], max_new: int,
+                 key: Optional[jax.Array] = None) -> List[List[int]]:
+        cfg, sc = self.cfg, self.sc
+        toks, L = self._pad_prompts(prompts)
+        B = toks.shape[0]
+        S = sc.max_seq
+        assert L + max_new <= S, "max_seq too small"
+        # prefill over the prompt, then pad caches out to max_seq
+        batch: Dict = {"tokens": toks}
+        logits, caches = self._prefill(self.params, batch)
+        caches = jax.tree.map(
+            lambda c: jnp.pad(
+                c, [(0, 0), (0, 0), (0, S - c.shape[2]), (0, 0), (0, 0)]
+            ) if c.ndim == 5 and c.shape[2] == L else c,
+            caches,
+        )
+        out = [list(p) for p in prompts]
+        tok = self._sample(logits, key, 0)
+        for step in range(max_new):
+            for i in range(B):
+                out[i].append(int(tok[i]))
+            if step == max_new - 1:
+                break
+            pos = jnp.int32(L + step)
+            logits, caches = self._decode(self.params, tok, pos, caches)
+            key = jax.random.fold_in(key, step) if key is not None else None
+            tok = self._sample(logits, key, step + 1)
+        return out
+
+    def _sample(self, logits: jax.Array, key, step: int) -> jax.Array:
+        if self.sc.temperature <= 0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            jax.random.fold_in(key, step), logits / self.sc.temperature
+        ).astype(jnp.int32)
+
+
+def seed_serve_step(cfg: ModelConfig, params, token, pos, caches):
+    """The decode-shape dry-run target: one new token, full-length KV cache."""
+    return T.decode_step(cfg, params, token, pos, caches)
