@@ -10,7 +10,9 @@ Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
   roofline— dry-run derived roofline terms (if artifacts exist)
   sim     — time-to-target-loss frontier on the simulated cluster
             (tau/m/straggler/topology axes plus the compress-mode axis:
-            per-worker vs legacy QSGD wire accounting)
+            per-worker vs legacy QSGD wire accounting, plus the
+            overlap/contention axis — latency-honest rounds,
+            BENCH_sim_frontier_overlap.json)
   serve   — serving frontier: continuous batching vs the seed synchronous
             batch path under open-loop Poisson traffic (slots x rate x
             arch; tok/s + p50/p99 TTFT/latency, BENCH_serve.json)

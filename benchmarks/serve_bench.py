@@ -21,6 +21,7 @@ from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import Engine, ServeConfig
 from repro.sim.traffic import (
+    StepOverheads,
     TrafficSpec,
     replay,
     replay_seed_sync,
@@ -30,12 +31,13 @@ from repro.sim.traffic import (
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_cell(cfg, params, spec: TrafficSpec, slots: int, flops: float):
+def run_cell(cfg, params, spec: TrafficSpec, slots: int, flops: float,
+             overheads: StepOverheads):
     cm = serve_compute_model(cfg, flops_per_sec=flops)
     eng = Engine(cfg, params,
                  ServeConfig(max_seq=spec.required_max_seq(), slots=slots))
-    cont = replay(eng, spec, cm)
-    sync = replay_seed_sync(spec, cm, batch=slots)
+    cont = replay(eng, spec, cm, overheads)
+    sync = replay_seed_sync(spec, cm, batch=slots, overheads=overheads)
     return cont, sync
 
 
@@ -48,9 +50,17 @@ def main(argv=None):
     ap.add_argument("--mix", default="mixed")
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--flops-per-sec", type=float, default=1e9)
+    ap.add_argument("--dispatch-us", type=float, default=200.0,
+                    help="per-step dispatch overhead (µs): each prefill "
+                         "bucket and each decode step pays this once, so "
+                         "the slots axis prices batching amortization")
+    ap.add_argument("--sample-us", type=float, default=50.0,
+                    help="per-decode-step sampling/detokenize overhead (µs)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default=os.path.join(ROOT, "BENCH_serve.json"))
     args = ap.parse_args(argv)
+    overheads = StepOverheads(dispatch_s=args.dispatch_us * 1e-6,
+                              sample_s=args.sample_us * 1e-6)
 
     archs = args.archs or (["qwen3-14b"] if args.smoke
                            else ["qwen3-14b", "gemma2-2b"])
@@ -72,7 +82,7 @@ def main(argv=None):
                     rate=rate, n_requests=n_req, mix=args.mix,
                     seed=args.seed, vocab=cfg.vocab_size)
                 cont, sync = run_cell(cfg, params, spec, slots,
-                                      args.flops_per_sec)
+                                      args.flops_per_sec, overheads)
                 for name, res in (("continuous", cont), ("seed_sync", sync)):
                     s = res.summary
                     rows.append(dict(
@@ -93,8 +103,9 @@ def main(argv=None):
         bench="serve",
         config=dict(smoke=args.smoke, archs=archs, slots=slots_axis,
                     rates=rates, mix=args.mix, requests=n_req,
-                    flops_per_sec=args.flops_per_sec, seed=args.seed,
-                    out=args.out),
+                    flops_per_sec=args.flops_per_sec,
+                    dispatch_us=args.dispatch_us, sample_us=args.sample_us,
+                    seed=args.seed, out=args.out),
         orderings=orderings,
         rows=rows,
     )

@@ -34,6 +34,7 @@ from repro.dist import get_compressor
 from repro.models.mlp import init_mlp_classifier, mlp_loss
 from repro.sim import (
     COLLECTIVE_KINDS,
+    ClusterSpec,
     Topology,
     bandwidth_constrained,
     compute_model_for,
@@ -67,6 +68,108 @@ def fmt(v):
     return str(v)
 
 
+def overlap_axis(args, ds, params):
+    """Latency-honest axis: compute/communication overlap + per-link
+    contention (the ISSUE-7 acceptance criterion).
+
+    Runs on a DEDICATED cluster point — m=4, 1 GFLOP/s workers, a 50 MB/s
+    ring with 1 µs latency (2-pod variant: 100 MB/s inter-pod ring) — chosen
+    so the FO gradient collective is a few times one worker's compute:
+    bucketed overlap can then hide HO-SGD's comm almost entirely (its tau−1
+    ZO rounds move 4·m bytes ≈ free; the lone FO round amortizes over the
+    window) while sync-SGD pays an exposed tail EVERY iteration.  Asserts,
+    per topology (1-pod ring and 2-pod hierarchical):
+
+      * ho_sgd  overlapped: sim_seconds ≤ 1.05 × compute_s (comm hidden);
+      * sync_sgd overlapped: sim_seconds ≥ 1.20 × compute_s (comm exposed);
+      * CommLedger bytes bit-identical with overlap on vs off.
+
+    Then the contention sub-axis: the same point run async
+    (max_staleness=2, stragglers) with shared-link contention on vs off —
+    serializing concurrent exchanges can only delay, never change bytes.
+    Writes ``--overlap-out`` (BENCH_sim_frontier_overlap.json).
+    """
+    B, iters, tau, batch = (args.overlap_buckets, args.overlap_iters, 16, 64)
+    base = ClusterSpec(m=4, flops_per_sec=1e9, alpha=1e-6, bandwidth=5e7,
+                       collective="ring", seed=args.seed)
+    topos = {
+        "ring-1pod": None,
+        "ring-2pod": Topology(pods=2, inter_alpha=1e-6, inter_bandwidth=1e8),
+    }
+    rows = []
+
+    def cell(label, cluster, method, buckets):
+        sm = make_sim_methods(mlp_loss, params, cluster, tau=tau, lr=args.lr,
+                              seed=args.seed, which=[method],
+                              overlap_buckets=buckets)[method]
+        compute = compute_model_for(params, cluster, batch // cluster.m)
+        res = simulate(sm, params, batches(ds, batch, seed=args.seed),
+                       cluster, iters, compute=compute)
+        row = dict(config=label, method=method, buckets=buckets,
+                   contention=cluster.contention,
+                   staleness=cluster.max_staleness,
+                   sim_seconds=res.sim_seconds, compute_s=res.compute_s,
+                   comm_s=res.comm_s,
+                   exposed_ratio=res.sim_seconds / res.compute_s,
+                   bytes_total=res.bytes_total,
+                   comm_bytes=list(res.comm_bytes))
+        rows.append(row)
+        print(f"sim/overlap[{label}],0,{fmt(row['sim_seconds'])},"
+              f"{fmt(row['compute_s'])},{fmt(row['comm_s'])},"
+              f"{fmt(row['exposed_ratio'])},{row['bytes_total']}")
+        return row
+
+    print("name,us_per_call,sim_seconds,compute_s,comm_s,exposed_ratio,"
+          "bytes_total")
+    acceptance = {}
+    for tag, topo in topos.items():
+        cl = base.with_(topology=topo)
+        ho_off = cell(f"{tag}][ho_sgd][B=1", cl, "ho_sgd", 1)
+        ho_on = cell(f"{tag}][ho_sgd][B={B}", cl, "ho_sgd", B)
+        sy_off = cell(f"{tag}][sync_sgd][B=1", cl, "sync_sgd", 1)
+        sy_on = cell(f"{tag}][sync_sgd][B={B}", cl, "sync_sgd", B)
+        acceptance[f"ho_comm_hidden[{tag}]"] = \
+            ho_on["exposed_ratio"] <= 1.05
+        acceptance[f"sync_comm_exposed[{tag}]"] = \
+            sy_on["exposed_ratio"] >= 1.20
+        acceptance[f"bytes_invariant[{tag}]"] = (
+            ho_on["bytes_total"] == ho_off["bytes_total"]
+            and ho_on["comm_bytes"] == ho_off["comm_bytes"]
+            and sy_on["bytes_total"] == sy_off["bytes_total"]
+            and sy_on["comm_bytes"] == sy_off["comm_bytes"])
+
+    # contention sub-axis: unbarriered ZO exchanges through shared links
+    for tag, topo in topos.items():
+        cl = base.with_(topology=topo, max_staleness=2, straggler_prob=0.3)
+        c_on = cell(f"{tag}][ho_sgd][stale=2,contention=on", cl, "ho_sgd", 1)
+        c_off = cell(f"{tag}][ho_sgd][stale=2,contention=off",
+                     cl.with_(contention=False), "ho_sgd", 1)
+        acceptance[f"contention_delays_only[{tag}]"] = (
+            c_on["sim_seconds"] >= c_off["sim_seconds"]
+            and c_on["bytes_total"] == c_off["bytes_total"])
+
+    for k, ok in acceptance.items():
+        print(f"sim/overlap_acceptance[{k}],0,{int(ok)}")
+
+    if args.overlap_out:
+        out_dir = os.path.dirname(args.overlap_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.overlap_out, "w") as f:
+            json.dump({
+                "bench": "sim_frontier_overlap",
+                "config": dict(buckets=B, iters=iters, tau=tau, batch=batch,
+                               seed=args.seed),
+                "acceptance": {k: bool(v) for k, v in acceptance.items()},
+                "rows": rows,
+            }, f, indent=1)
+        print(f"# wrote {args.overlap_out}")
+
+    bad = [k for k, ok in acceptance.items() if not ok]
+    if bad:
+        raise SystemExit(f"overlap/contention acceptance violated: {bad}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
@@ -94,6 +197,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out",
                     default=os.path.join(REPO_ROOT, "BENCH_sim_frontier.json"))
+    # overlap / contention axis (latency-honest rounds)
+    ap.add_argument("--overlap-buckets", type=int, default=8,
+                    help="bucket count for the overlap axis cells")
+    ap.add_argument("--overlap-iters", type=int, default=48,
+                    help="iterations per overlap-axis cell")
+    ap.add_argument("--overlap-only", action="store_true",
+                    help="run just the overlap/contention axis (CI step)")
+    ap.add_argument("--no-overlap-axis", action="store_true",
+                    help="skip the overlap/contention axis (used by the "
+                         "ring2pod/gossip CI steps so it runs exactly once)")
+    ap.add_argument("--overlap-out",
+                    default=os.path.join(REPO_ROOT,
+                                         "BENCH_sim_frontier_overlap.json"))
     args = ap.parse_args(argv)
 
     taus = [2, 8] if args.smoke else [2, 4, 8, 16]
@@ -109,6 +225,9 @@ def main(argv=None):
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
                                  ds.n_classes, hidden=args.hidden)
+    if args.overlap_only:
+        overlap_axis(args, ds, params)
+        return
     inter_bw = (args.inter_bandwidth if args.inter_bandwidth is not None
                 else args.bandwidth / 4)
 
@@ -244,6 +363,9 @@ def main(argv=None):
         raise SystemExit(
             f"qualitative ordering violated: ho<sync={ok_sync} "
             f"ho<zo(feval_s)={ok_zo} topo_violations={bad_topo}")
+
+    if not args.no_overlap_axis:
+        overlap_axis(args, ds, params)
 
 
 if __name__ == "__main__":

@@ -66,6 +66,7 @@ def make_fo_step(
     seed: int = 0,
     compress_mode: str = "per_worker",
     m: Optional[int] = None,
+    buckets: int = 1,
 ) -> Callable:
     """jit(train_step): (t, params, opt_state, batch) -> (params, state, loss).
 
@@ -91,11 +92,46 @@ def make_fo_step(
     microbatch scan collapses the per-worker gradients).  ``m`` defaults to
     the mesh's worker count; with ``m == 1`` the two modes coincide and the
     program is bit-identical to the uncompressed-era legacy path.
+
+    ``buckets > 1`` (CLI ``--fo-buckets``) attaches a ``rounds.Overlap``
+    spec and chunks the flat gradient into that many independently-reducible
+    buckets before the optimizer update — pure data movement (bit-identical
+    params, identical ledger bytes), but the gradient all-reduce GSPMD
+    inserts splits into per-bucket reduces the async-collective /
+    latency-hiding XLA scheduler (``launch.xla``) can overlap with compute.
     """
     rnd = rounds.fo_round(loss_fn, opt,
-                          wire=rounds.Wire(compressor, compress_mode))
+                          wire=rounds.Wire(compressor, compress_mode),
+                          overlap=rounds.Overlap(buckets))
     return lower_fo_round(rnd, mesh, grad_accum=grad_accum,
                           scan_unroll=scan_unroll, seed=seed, m=m)
+
+
+def _bucketed_reduce_form(grads: Any, buckets: int) -> Any:
+    """Rewrite a gradient tree into its chunked flat-gradient reduce form.
+
+    Flattens the tree into one flat vector, splits it into ``buckets``
+    contiguous chunks (the last one shorter when the parameter count does
+    not divide evenly), and reassembles the original tree from the chunk
+    concatenation.  Values are bit-identical — this is pure data movement —
+    but each chunk is an independent intermediate, so the GSPMD gradient
+    all-reduce lowers to per-bucket reduces the latency-hiding scheduler
+    can pipeline against compute (the real-path mirror of the sim's
+    ``Overlap`` pricing).  Wire bytes are unchanged: same tree, same dtypes.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    flat = (jnp.concatenate([l.reshape(-1) for l in leaves])
+            if len(leaves) > 1 else leaves[0].reshape(-1))
+    n = flat.shape[0]
+    size = max(1, -(-n // buckets))          # ceil; last chunk takes the rest
+    chunks = [jax.lax.slice_in_dim(flat, lo, min(lo + size, n))
+              for lo in range(0, n, size)]
+    flat = jnp.concatenate(chunks) if len(chunks) > 1 else chunks[0]
+    out, off = [], 0
+    for l in leaves:
+        out.append(jax.lax.slice_in_dim(flat, off, off + l.size).reshape(l.shape))
+        off += l.size
+    return jax.tree.unflatten(treedef, out)
 
 
 def lower_fo_round(
@@ -108,9 +144,12 @@ def lower_fo_round(
     m: Optional[int] = None,
 ) -> Callable:
     """Fuse an FO round's per-worker locals + all-reduce + apply into one
-    data-parallel program (the gradient reduction is GSPMD-inserted)."""
+    data-parallel program (the gradient reduction is GSPMD-inserted).  The
+    round's ``Overlap`` spec selects the chunked reduce form
+    (``_bucketed_reduce_form``) — bit-identical math, same booked bytes."""
     loss_fn, opt = rnd.meta["loss_fn"], rnd.meta["opt"]
     compressor, mode = rnd.wire.codec, rnd.wire.mode
+    buckets = getattr(rnd.overlap, "buckets", 1)
     m = m if m is not None else _mesh_workers(mesh)
     per_worker = compressor is not None and mode == "per_worker" and m > 1
     if per_worker and grad_accum > 1:
@@ -185,6 +224,8 @@ def lower_fo_round(
                 coll.note_all_reduce(grads, nbytes=wire, tag=compressor.name)
             else:
                 coll.note_all_reduce(grads, tag="grads")
+        if buckets > 1:
+            grads = _bucketed_reduce_form(grads, buckets)
         deltas, opt_state = opt.update(grads, opt_state, params, t)
         return apply_deltas(params, deltas), opt_state, loss
 
@@ -355,13 +396,16 @@ def make_distributed_ho_sgd(
     compressor: Optional[Compressor] = None,
     vmap_workers: bool = False,
     compress_mode: str = "per_worker",
+    fo_buckets: int = 1,
 ):
     """Returns (fo_step, zo_step) honoring the arch's production knobs.
 
     ``compressor`` (repro.dist.compress) quantizes the FO gradient exchange
     (``compress_mode``: per-worker encode + reducer decode, or the legacy
     post-reduction simulation); the ZO step is untouched — its traffic is
-    already one scalar per worker.
+    already one scalar per worker.  ``fo_buckets > 1`` lowers the FO round
+    in its chunked reduce form (bit-identical math, same bytes) for the
+    async-collective/latency-hiding XLA scheduler to overlap.
     """
     opt = opt or sgd(const_schedule(ho.lr), ho.momentum)
     ga = getattr(model_cfg, "grad_accum", 1) if model_cfg is not None else 1
@@ -372,7 +416,7 @@ def make_distributed_ho_sgd(
         specs = param_specs(model_cfg, params_like, mesh)
     fo = make_fo_step(loss_fn, mesh, opt, grad_accum=ga, scan_unroll=su,
                       compressor=compressor, seed=ho.seed,
-                      compress_mode=compress_mode)
+                      compress_mode=compress_mode, buckets=fo_buckets)
     zo = make_zo_step(loss_fn, mesh, ho, opt, fsdp=fsdp, param_specs_tree=specs,
                       vmap_workers=vmap_workers)
     return fo, zo

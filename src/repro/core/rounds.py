@@ -97,6 +97,41 @@ class Wire:
 
 
 @dataclass(frozen=True)
+class Overlap:
+    """Compute/communication overlap spec for a round.
+
+    ``buckets > 1`` splits the round's wire payload into that many buckets:
+    bucket k's collective may run concurrently with the local compute that
+    produces chunk k+1, so only the tail of the collective is exposed on
+    the critical path.  ``buckets=1`` is the strict compute-then-communicate
+    round (the historical price, and the default).
+
+    The spec changes *time only, never bytes*: the simulator prices an
+    overlapped round as ``compute + max(0, comm − compute·(B−1)/B)`` (the
+    first chunk must finish before the first bucket can depart; see
+    ``sim.costs.exposed_comm_time``), the mesh lowering chunks the flat
+    gradient into ``B`` independently-reducible buckets
+    (``core.distributed.lower_fo_round``), and the ``CommLedger`` books the
+    identical wire bytes either way — pinned in ``tests/test_comm_ledger.py``.
+    """
+
+    buckets: int = 1
+
+    def __post_init__(self):
+        assert self.buckets >= 1, f"overlap buckets must be >= 1, got {self.buckets}"
+
+    @property
+    def enabled(self) -> bool:
+        return self.buckets > 1
+
+    @property
+    def overlappable_fraction(self) -> float:
+        """Fraction of the round's local compute a pipelined collective can
+        hide behind: (B−1)/B — chunk 1 must exist before bucket 1 departs."""
+        return (self.buckets - 1) / self.buckets
+
+
+@dataclass(frozen=True)
 class Round:
     """One per-worker round: local computation + collective + apply.
 
@@ -128,6 +163,7 @@ class Round:
     wire: Wire = field(default_factory=Wire)
     replica: bool = False
     meta: Any = None
+    overlap: Overlap = field(default_factory=Overlap)
 
     def __post_init__(self):
         assert self.collective in COLLECTIVES, \
@@ -394,11 +430,14 @@ def to_method(prog: RoundProgram) -> Method:
 # --------------------------------------------------------------------------- #
 # the HO-SGD family as a round program
 # --------------------------------------------------------------------------- #
-def fo_round(loss_fn: Callable, opt, *, wire: Optional[Wire] = None) -> Round:
+def fo_round(loss_fn: Callable, opt, *, wire: Optional[Wire] = None,
+             overlap: Optional[Overlap] = None) -> Round:
     """Eq. (3): each worker's shard gradient, all-reduce mean, optimizer
     update.  The mesh lowering (``core.distributed.make_fo_step``) fuses the
     per-worker locals into one data-parallel ``value_and_grad`` whose
-    gradient all-reduce GSPMD inserts — same math, booked identically."""
+    gradient all-reduce GSPMD inserts — same math, booked identically.
+    An ``overlap`` spec buckets the gradient all-reduce (chunked lowering on
+    the mesh, exposed-comm pricing in the sim) without changing bytes."""
     from repro.opt.optimizers import apply_deltas
 
     wire = wire or Wire()
@@ -418,10 +457,12 @@ def fo_round(loss_fn: Callable, opt, *, wire: Optional[Wire] = None) -> Round:
         return params, {**state, "opt": opt_state}, {"loss": loss}
 
     return Round("fo", 1, "all_reduce", local, apply, wire=wire,
-                 meta={"loss_fn": loss_fn, "opt": opt})
+                 meta={"loss_fn": loss_fn, "opt": opt},
+                 overlap=overlap or Overlap())
 
 
-def zo_round(loss_fn: Callable, ho, opt, *, m: Optional[int] = None) -> Round:
+def zo_round(loss_fn: Callable, ho, opt, *, m: Optional[int] = None,
+             overlap: Optional[Overlap] = None) -> Round:
     """Eq. (4)-(6): each worker's directional-derivative scalar in its
     pre-shared direction, all-gathered; every receiver reconstructs the
     update from the coefficients of the workers that actually contributed
@@ -450,7 +491,8 @@ def zo_round(loss_fn: Callable, ho, opt, *, m: Optional[int] = None) -> Round:
         return params, {**state, "opt": opt_state}, {"loss": loss}
 
     return Round("zo", 0, "all_gather", local, apply,
-                 meta={"loss_fn": loss_fn, "ho": ho, "opt": opt, "m": m})
+                 meta={"loss_fn": loss_fn, "ho": ho, "opt": opt, "m": m},
+                 overlap=overlap or Overlap())
 
 
 def ho_sgd_program(
@@ -462,18 +504,20 @@ def ho_sgd_program(
     wire: Optional[Wire] = None,
     tau_schedule: Optional[Callable[[int], int]] = None,
     zo_only: bool = False,
+    overlap: Optional[Overlap] = None,
 ) -> RoundProgram:
     """HO-SGD (Algorithm 1) as a round program: FO sync rounds every tau
     iterations (or per ``tau_schedule`` through the shared
     ``adaptive_tau_decision``), ZO rounds in between; ``zo_only`` never
     syncs (distributed ZO-SGD).  State is ``{"opt": ..., "since_fo": int}``
-    — the same layout the simulator checkpoints."""
+    — the same layout the simulator checkpoints.  ``overlap`` buckets both
+    round kinds' collectives (time only, never bytes)."""
     from repro.core.ho_sgd import adaptive_tau_decision
     from repro.opt.optimizers import const_schedule, sgd
 
     opt = opt or sgd(const_schedule(ho.lr), ho.momentum)
-    fo = fo_round(loss_fn, opt, wire=wire)
-    zo = zo_round(loss_fn, ho, opt, m=ho.m)
+    fo = fo_round(loss_fn, opt, wire=wire, overlap=overlap)
+    zo = zo_round(loss_fn, ho, opt, m=ho.m, overlap=overlap)
 
     def init(params):
         return {"opt": opt.init(params), "since_fo": 0}

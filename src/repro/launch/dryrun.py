@@ -1,11 +1,4 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# (the two lines above MUST run before any jax-importing module: jax locks the
-# device count on first init.  Everything else follows.)
-if os.environ.get("REPRO_DRYRUN_DEVICES"):
-    os.environ["XLA_FLAGS"] = (
-        f"--xla_force_host_platform_device_count={os.environ['REPRO_DRYRUN_DEVICES']}"
-    )
+from repro.launch import dryrun_flags  # noqa: F401  (must precede any jax import)
 
 # Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
 #
@@ -22,6 +15,7 @@ if os.environ.get("REPRO_DRYRUN_DEVICES"):
 
 import argparse
 import json
+import os
 import time
 from typing import Dict, Optional, Tuple
 

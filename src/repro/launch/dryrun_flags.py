@@ -1,0 +1,17 @@
+"""The dryrun's XLA environment setup, import-time on purpose.
+
+Owns exactly ONE XLA knob — the forced host device count — and COMPOSES it
+with whatever XLA_FLAGS the user exported (latency-hiding / async-collective
+flags would otherwise silently vanish).  This must run before any
+jax-importing module: jax locks the device count on first backend init.
+Kept free of jax imports itself (``repro.launch.xla`` is pure string/env
+code) so tests can re-import it and ``launch.dryrun`` can import it first.
+"""
+import os
+
+from repro.launch.xla import append_xla_flags
+
+DEVICES = os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+append_xla_flags(
+    [f"--xla_force_host_platform_device_count={DEVICES}"],
+    drop_prefixes=("--xla_force_host_platform_device_count",))

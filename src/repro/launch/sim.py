@@ -98,6 +98,16 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=0,
                     help="sim-checkpoint period (iterations); required >0 "
                          "when --fail-rate > 0")
+    # overlap / contention (latency-honest rounds)
+    ap.add_argument("--overlap-buckets", type=int, default=1,
+                    help="bucket the HO-family collectives for compute/comm "
+                         "overlap: only the exposed tail of the collective "
+                         "is priced (costs.exposed_comm_time); 1 = strict "
+                         "compute-then-communicate.  Bytes never change.")
+    ap.add_argument("--no-contention", action="store_true",
+                    help="price concurrent async exchanges independently "
+                         "instead of serializing them on shared per-pod/"
+                         "inter-pod links (events.LinkContention)")
     # output
     ap.add_argument("--target-loss", type=float, default=None)
     ap.add_argument("--eval-every", type=int, default=5)
@@ -115,7 +125,8 @@ def main(argv=None):
         straggler_slowdown=args.straggler_slowdown, jitter_sigma=args.jitter,
         fail_rate=args.fail_rate, elastic=args.elastic,
         downtime=args.downtime, restart_time=args.restart_time,
-        ckpt_every=args.ckpt_every, seed=args.seed)
+        ckpt_every=args.ckpt_every, contention=not args.no_contention,
+        seed=args.seed)
 
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
@@ -132,14 +143,16 @@ def main(argv=None):
         mlp_loss, params, cluster, tau=args.tau, lr=args.lr, zo_lr=args.zo_lr,
         mu=args.mu, seed=args.seed, codec=get_compressor(args.compress),
         compress_mode=args.compress_mode, tau_schedule=sched,
-        which=args.methods)
+        which=args.methods, overlap_buckets=args.overlap_buckets)
 
     print(f"sim: dataset={args.dataset} d={d:,} m={cluster.m} "
           f"bandwidth={cluster.bandwidth:.3g}B/s alpha={cluster.alpha:.3g}s "
           f"flops={cluster.flops_per_sec:.3g}/s seed={cluster.seed} "
           f"collective={cluster.collective} pods={args.pods} "
           f"staleness={cluster.max_staleness} elastic={cluster.elastic} "
-          f"replay={args.replay} compress_mode={args.compress_mode}")
+          f"replay={args.replay} compress_mode={args.compress_mode} "
+          f"overlap_buckets={args.overlap_buckets} "
+          f"contention={cluster.contention}")
     summaries = {}
     with CSVLogger(args.log, ["method", "iter", "order", "loss", "t_sim",
                               "comm_bytes"]) as logger:

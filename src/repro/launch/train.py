@@ -82,8 +82,21 @@ def main(argv=None):
                     choices=["tree", "fused", "pallas"],
                     help="DirectionEngine backend for the ZO direction "
                          "algebra (repro.core.engine)")
+    ap.add_argument("--fo-buckets", type=int, default=1,
+                    help="chunk the FO gradient all-reduce into this many "
+                         "independently-reducible buckets (bit-identical "
+                         "math, same ledger bytes; pairs with --xla-overlap "
+                         "so the scheduler hides them behind compute)")
+    ap.add_argument("--xla-overlap", action="store_true",
+                    help="append the async-collective + latency-hiding "
+                         "scheduler XLA flags (launch.xla, composed with "
+                         "any user-set XLA_FLAGS, never replacing them)")
     args = ap.parse_args(argv)
 
+    if args.xla_overlap:
+        # must land before the first device query initializes the backend
+        from repro.launch.xla import enable_collective_overlap
+        enable_collective_overlap()
     n_dev = jax.device_count()
     data_ax = args.data_axis or max(1, n_dev // args.model_axis)
     mesh = make_test_mesh(data=data_ax, model=args.model_axis)
@@ -106,7 +119,8 @@ def main(argv=None):
     codec = get_compressor(args.compress)
     fo, zo = make_distributed_ho_sgd(loss_fn, mesh, ho, opt, model_cfg=cfg,
                                      params_like=params, compressor=codec,
-                                     compress_mode=args.compress_mode)
+                                     compress_mode=args.compress_mode,
+                                     fo_buckets=args.fo_buckets)
 
     # adaptive tau: the same decision logic the Method and the simulator use
     # (core.ho_sgd.adaptive_tau_decision); the fixed-tau default path stays

@@ -8,10 +8,14 @@ the way ``repro.dist`` owns sharding and ``DirectionEngine`` owns ZO
 algebra.
 
   * ``events``  — deterministic event loop, per-worker clocks, the
-    barriered all-reduce primitive and its bounded-staleness async twin.
+    barriered all-reduce primitive and its bounded-staleness async twin,
+    plus the shared-link contention resources (``SharedLink`` /
+    ``LinkContention``) that serialize concurrent unbarriered transfers
+    in deterministic (time, worker) order.
   * ``costs``   — pluggable hardware cost models (FLOP-based compute,
     alpha–beta links, ``CollectiveModel`` pricing flat/ring/tree/gossip
-    and hierarchical multi-pod all-reduces); byte counts always come from
+    and hierarchical multi-pod all-reduces, overlap-aware exposed-comm
+    pricing via ``exposed_comm_time``); byte counts always come from
     the ``CommLedger`` / the round IR's wire model (``rounds.wire_nbytes``
     over ``dist.compress`` estimates), never re-derived.
   * ``cluster`` — ``ClusterSpec``: heterogeneous speeds, seeded straggler
@@ -41,14 +45,18 @@ from repro.sim.costs import (  # noqa: F401
     LinkModel,
     StepCost,
     config_fwd_flops,
+    exposed_comm_time,
     flat_all_reduce_time,
     gossip_exchange_time,
+    overlapped_step_time,
     ring_all_reduce_time,
     tree_all_reduce_time,
     tree_fwd_flops,
 )
 from repro.sim.events import (  # noqa: F401
     EventLoop,
+    LinkContention,
+    SharedLink,
     WorkerClocks,
     async_all_reduce,
     barrier_all_reduce,
@@ -62,6 +70,7 @@ from repro.sim.runner import (  # noqa: F401
 )
 from repro.sim.traffic import (  # noqa: F401
     MIXES,
+    StepOverheads,
     TrafficResult,
     TrafficSpec,
     poisson_trace,

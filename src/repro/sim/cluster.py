@@ -80,7 +80,15 @@ class ClusterSpec:
     Links: ``collective`` picks the all-reduce algorithm (``flat`` —
     PR 3's switched exchange — ``ring`` or ``tree``); a ``topology`` with
     ``pods > 1`` makes the reduce hierarchical (intra-pod ``collective``
-    + inter-pod ring on the topology's slow link).
+    + inter-pod ring on the topology's slow link).  With ``contention``
+    (the latency-honest default) the UNBARRIERED exchanges of async rounds
+    route through shared per-pod links plus the inter-pod link
+    (``events.LinkContention``): concurrent transfers serialize in
+    deterministic (time, worker) order instead of being priced
+    independently.  Barriered collectives are unaffected — the
+    ``CollectiveModel`` already prices the joint algorithm and nothing else
+    is in flight at a barrier — so synchronous specs are bit-identical
+    with the flag on or off.
     """
 
     m: int = 4
@@ -99,6 +107,7 @@ class ClusterSpec:
     downtime: float = 60.0               # mean elastic rejoin delay (s)
     restart_time: float = 30.0           # checkpoint-restore charge (s)
     ckpt_every: int = 0                  # iterations between sim checkpoints
+    contention: bool = True              # shared links for async exchanges
     seed: int = 0
 
     def __post_init__(self):

@@ -113,16 +113,56 @@ class CollectiveModel:
                 "multi-pod collectives need an inter-pod LinkModel"
 
     def all_reduce_time(self, nbytes: float, w: int) -> float:
+        intra, inter = self.time_components(nbytes, w)
+        return intra + inter
+
+    def time_components(self, nbytes: float, w: int) -> "tuple[float, float]":
+        """``(intra_pod_s, inter_pod_s)`` split of the collective's time —
+        the contention model routes each component through its own shared
+        link (the pod link vs the Topology's inter-pod link).  Single-pod
+        collectives put everything in the intra component."""
         if nbytes <= 0 or w <= 1:
-            return 0.0
+            return 0.0, 0.0
         algo = _ALGOS[self.kind]
         if self.pods <= 1:
-            return algo(self.link, nbytes, w)
+            return algo(self.link, nbytes, w), 0.0
         wpp = max(1, math.ceil(w / self.pods))
         intra = algo(self.link, nbytes, wpp)
         inter = ring_all_reduce_time(self.inter_link, nbytes,
                                      min(self.pods, w))
-        return intra + inter
+        return intra, inter
+
+
+def exposed_comm_time(cm: CollectiveModel, nbytes: float, w: int,
+                      buckets: int, compute_s: float) -> float:
+    """Exposed (critical-path) communication time of one overlapped round.
+
+    With the payload split into ``buckets`` buckets, bucket k's collective
+    pipelines behind the compute producing chunk k+1, so only
+    ``max(0, comm − overlappable)`` of the collective's time lands on the
+    critical path, where ``overlappable = compute · (B−1)/B`` — the first
+    chunk must finish before the first bucket can depart, so 1/B of the
+    round's compute can never hide traffic.  This is the optimistic
+    pipelining bound: bucket latencies are assumed hidden inside the
+    pipeline, and ``comm`` is the full payload's collective time (bytes are
+    unchanged by bucketing — the ``CommLedger`` invariant).
+
+    ``buckets=1`` degenerates exactly to the strict compute-then-communicate
+    price (``comm`` fully exposed), keeping every unbucketed pin intact.
+    """
+    comm = cm.all_reduce_time(nbytes, w)
+    if buckets <= 1 or comm <= 0.0:
+        return comm
+    overlappable = float(compute_s) * (buckets - 1) / buckets
+    return max(0.0, comm - overlappable)
+
+
+def overlapped_step_time(cm: CollectiveModel, nbytes: float, w: int,
+                         buckets: int, compute_s: float) -> float:
+    """Critical-path time of one overlapped round: local compute plus the
+    exposed tail of its bucketed collective."""
+    return float(compute_s) + exposed_comm_time(cm, nbytes, w, buckets,
+                                                compute_s)
 
 
 @dataclass(frozen=True)

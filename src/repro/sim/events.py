@@ -141,6 +141,128 @@ def barrier_all_reduce(
     return done
 
 
+@dataclass
+class SharedLink:
+    """A shared-bandwidth resource serving one transfer at a time.
+
+    ``acquire(at, duration)`` queues a transfer that becomes ready at
+    ``at``: it starts at ``max(at, free_at)`` — waiting behind whatever is
+    already on the wire — and returns its completion time, advancing the
+    link's busy horizon.  Callers MUST acquire in deterministic
+    (ready_time, worker) order; the FIFO discipline then yields the
+    deterministic contention sharing the README §repro.sim contract pins:
+    two transfers of duration ``g`` both ready at ``T`` complete at
+    ``T + g`` and ``T + 2g`` (aggregate throughput = fair bandwidth share,
+    with a deterministic completion order instead of fractional-rate
+    bookkeeping).  Zero-duration requests pass through untouched.
+    """
+
+    free_at: float = 0.0
+
+    def acquire(self, at: float, duration: float) -> float:
+        if duration <= 0.0:
+            return float(at)
+        start = max(float(at), self.free_at)
+        self.free_at = start + float(duration)
+        return self.free_at
+
+
+@dataclass
+class LinkContention:
+    """Per-link contention state for unbarriered exchanges: one
+    ``SharedLink`` per pod plus one shared inter-pod link (the multi-pod
+    bottleneck).  A worker's exchange routes through its pod's link for the
+    intra-pod component, then the inter-pod link for the inter component
+    (zero on single-pod clusters) — concurrent transfers on the same link
+    serialize instead of being priced independently.
+
+    Barriered collectives do NOT route through these links: the
+    ``CollectiveModel`` already prices the whole membership's joint
+    algorithm, and the barrier guarantees nothing else is in flight.
+    """
+
+    m: int
+    pods: int = 1
+    pod_links: Optional[List[SharedLink]] = None
+    inter: SharedLink = field(default_factory=SharedLink)
+
+    def __post_init__(self):
+        assert self.pods >= 1 and self.m >= 1
+        if self.pod_links is None:
+            self.pod_links = [SharedLink() for _ in range(self.pods)]
+
+    def pod_of(self, worker: int) -> int:
+        wpp = max(1, self.m // self.pods)
+        return min(worker // wpp, self.pods - 1)
+
+    def transfer(self, worker: int, at: float, intra_s: float,
+                 inter_s: float = 0.0) -> float:
+        t1 = self.pod_links[self.pod_of(worker)].acquire(at, intra_s)
+        return self.inter.acquire(t1, inter_s)
+
+    def clone(self) -> "LinkContention":
+        return LinkContention(
+            self.m, self.pods,
+            [SharedLink(l.free_at) for l in self.pod_links],
+            SharedLink(self.inter.free_at))
+
+    def adopt(self, other: "LinkContention") -> None:
+        for mine, theirs in zip(self.pod_links, other.pod_links):
+            mine.free_at = theirs.free_at
+        self.inter.free_at = other.inter.free_at
+
+
+def plan_async_round(
+    clocks: WorkerClocks,
+    compute_dts: Sequence[float],
+    gate: float,
+    workers: Sequence[int],
+    comm_for,
+    contention: Optional[LinkContention] = None,
+):
+    """Pure planning pass for one unbarriered round.
+
+    ``comm_for(i) -> (intra_s, inter_s)`` gives worker ``i``'s exchange
+    duration split (overlap-aware: the runner passes the EXPOSED time).
+    Returns ``(entries, trial)`` where ``entries`` is
+    ``[(t_compute_done, worker, t_round_end)]`` in deterministic
+    (time, worker) order and ``trial`` is the advanced CLONE of
+    ``contention`` (or None) — nothing global is mutated, so the runner can
+    price a tentative commit (failure preemption) and only ``adopt`` the
+    link state if the round really lands.
+    """
+    trial = contention.clone() if contention is not None else None
+    entries = []
+    for t_done, i in sorted((max(clocks.t[i], gate) + compute_dts[i], i)
+                            for i in workers):
+        intra_s, inter_s = comm_for(i)
+        if trial is not None:
+            end = trial.transfer(i, t_done, intra_s, inter_s)
+        else:
+            end = t_done + intra_s + inter_s
+        entries.append((t_done, i, end))
+    return entries, trial
+
+
+def commit_async_round(
+    loop: EventLoop,
+    clocks: WorkerClocks,
+    entries,
+    *,
+    kind: str = "async_exchange",
+) -> float:
+    """Commit a planned unbarriered round: per-worker ``compute`` events in
+    the plan's (time, worker) order, clocks advanced to each worker's
+    exchange end, one ``kind`` event at the round's commit time (the latest
+    participating clock)."""
+    for t_done, i, end in entries:
+        loop.record(t_done, "compute", i)
+        clocks.t[i] = end
+    done = max(end for _, _, end in entries)
+    loop.record(done, kind)
+    return done
+
+
 def async_all_reduce(
     loop: EventLoop,
     clocks: WorkerClocks,
@@ -150,6 +272,7 @@ def async_all_reduce(
     *,
     kind: str = "async_exchange",
     active: Optional[Sequence[int]] = None,
+    contention: Optional[LinkContention] = None,
 ) -> float:
     """Bounded-staleness round: compute + exchange WITHOUT a barrier.
 
@@ -158,7 +281,9 @@ def async_all_reduce(
     the runner enforces that no worker runs more than ``max_staleness``
     rounds ahead of the slowest — computes for its own ``dt``, then pays
     ``comm_time`` for its own unbarriered exchange.  Clocks diverge; fast
-    workers pull ahead.
+    workers pull ahead.  With ``contention``, the per-worker exchanges
+    additionally serialize through the shared links in the same
+    deterministic (time, worker) order (``plan_async_round``).
 
     Completions are committed with ``loop.record`` in (time, worker) order
     *within the round*; across rounds a fast worker's completion may carry
@@ -169,11 +294,9 @@ def async_all_reduce(
     """
     assert len(compute_dts) == clocks.m
     workers = list(range(clocks.m)) if active is None else list(active)
-    finishes = sorted((max(clocks.t[i], gate) + compute_dts[i], i)
-                      for i in workers)
-    for t_done, i in finishes:
-        loop.record(t_done, "compute", i)
-        clocks.t[i] = t_done + (comm_time if comm_time > 0 else 0.0)
-    done = max(clocks.t[i] for i in workers)
-    loop.record(done, kind)
-    return done
+    comm = comm_time if comm_time > 0 else 0.0
+    entries, trial = plan_async_round(clocks, compute_dts, gate, workers,
+                                      lambda i: (comm, 0.0), contention)
+    if contention is not None and trial is not None:
+        contention.adopt(trial)
+    return commit_async_round(loop, clocks, entries, kind=kind)

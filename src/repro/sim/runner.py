@@ -72,12 +72,15 @@ from repro.dist.collectives import _tree_nbytes
 from repro.launch.mesh import make_test_mesh
 from repro.opt.optimizers import Optimizer, const_schedule, sgd
 from repro.sim.cluster import ClusterSpec
-from repro.sim.costs import ComputeModel, StepCost, tree_fwd_flops
+from repro.sim.costs import (ComputeModel, StepCost, exposed_comm_time,
+                             tree_fwd_flops)
 from repro.sim.events import (
     EventLoop,
+    LinkContention,
     WorkerClocks,
-    async_all_reduce,
     barrier_all_reduce,
+    commit_async_round,
+    plan_async_round,
 )
 
 REPLAY_MODES = ("per_worker", "monolithic")
@@ -112,6 +115,15 @@ class SimMethod:
     def order_for(self, t: int, state) -> int:
         assert self.program is not None
         return self.program.round_for(t, state).round.order
+
+    def overlap_for(self, t: int, state) -> int:
+        """Bucket count of the coming round's overlap spec (1 = strict
+        compute-then-communicate — every round without an explicit
+        ``rounds.Overlap`` prices exactly as before)."""
+        if self.program is None:
+            return 1
+        ov = getattr(self.program.round_for(t, state).round, "overlap", None)
+        return ov.buckets if ov is not None else 1
 
 
 @dataclass
@@ -256,6 +268,12 @@ def simulate(
     next_fail = cluster.draw_failure_gap(rng)
 
     stale = cluster.max_staleness
+    # shared-link state for unbarriered exchanges (per-pod + inter-pod);
+    # barriered collectives never route through it, so synchronous specs
+    # are untouched by the flag
+    pods = cluster.topology.pods if cluster.topology is not None else 1
+    contention = (LinkContention(cluster.m, pods)
+                  if cluster.contention and stale > 0 else None)
     active = list(range(cluster.m))   # live membership, ascending order
     rejoin_at: Dict[int, float] = {}  # left worker -> rejoin time
     pending = None   # monolithic replay: the in-flight (batch consumed)
@@ -355,13 +373,39 @@ def simulate(
             else:
                 comm_bytes = sc.comm_bytes
 
-            comm_time = cluster.collective_time(comm_bytes, len(active))
+            # overlap-aware pricing: with the round's payload split into B
+            # buckets, only the exposed tail of the collective lands on the
+            # critical path (costs.exposed_comm_time; B=1 exposes it all —
+            # the historical price, bit-identical).  Bytes are whatever the
+            # replayed programs booked, never rescaled by overlap.
+            cm = cluster.collective_model
+            w_live = len(active)
+            buckets = sm.overlap_for(t, state)
+            dt_crit = max(dts[i] for i in active)
+            exposed_crit = exposed_comm_time(cm, comm_bytes, w_live,
+                                             buckets, dt_crit)
+            entries = trial = None
             if is_async:
-                done_tent = max(max(clocks.t[i], gate) + dts[i]
-                                for i in active) + comm_time
+                # per-worker exchanges: each worker's exposed time uses its
+                # OWN compute (a straggler hides more), split into intra-/
+                # inter-pod components so contention routes each through
+                # the right shared link
+                intra_f, inter_f = cm.time_components(comm_bytes, w_live)
+                total_f = intra_f + inter_f
+
+                def comm_for(i):
+                    e = exposed_comm_time(cm, comm_bytes, w_live, buckets,
+                                          dts[i])
+                    if total_f <= 0.0:
+                        return 0.0, 0.0
+                    return e * intra_f / total_f, e * inter_f / total_f
+
+                entries, trial = plan_async_round(
+                    clocks, dts, gate, active, comm_for, contention)
+                done_tent = max(end for _, _, end in entries)
             else:
                 done_tent = max(clocks.t[i] + dts[i]
-                                for i in active) + comm_time
+                                for i in active) + exposed_crit
 
             if next_fail < done_tent:
                 if cluster.elastic:
@@ -419,17 +463,19 @@ def simulate(
                 continue
 
             # commit: drain per-worker compute through the event loop, then
-            # the exchange — barriered (FO sync / bulk-synchronous mode) or
-            # staleness-gated (async ZO rounds)
+            # the exchange — barriered (FO sync / bulk-synchronous mode,
+            # charged its exposed tail) or staleness-gated (async rounds:
+            # the planned unbarriered exchanges, adopting the shared-link
+            # state only now that the round really lands)
             if is_async:
-                done = async_all_reduce(loop, clocks, dts, comm_time, gate,
-                                        active=active)
+                if contention is not None and trial is not None:
+                    contention.adopt(trial)
+                done = commit_async_round(loop, clocks, entries)
             else:
-                done = barrier_all_reduce(loop, clocks, dts, comm_time,
+                done = barrier_all_reduce(loop, clocks, dts, exposed_crit,
                                           active=active)
-            dt_crit = max(dts[i] for i in active)
             res.compute_s += dt_crit
-            res.comm_s += comm_time
+            res.comm_s += exposed_crit
             if order == 0:
                 res.feval_s += dt_crit
             else:
@@ -491,21 +537,28 @@ def _ho_family(
     zo_only: bool = False,
     engine: str = "fused",
     compress_mode: str = "per_worker",
+    overlap_buckets: int = 1,
 ) -> SimMethod:
     """HO-SGD spectrum: the round program (``rounds.ho_sgd_program``) plus
     its monolithic lowering to the real distributed step programs (1x1
     mesh, ``m`` simulated workers in-program — the 0.4.x auto-sharded ZO
-    path), wrapped in a ``CommLedger`` so costs_for reads measured bytes."""
+    path), wrapped in a ``CommLedger`` so costs_for reads measured bytes.
+    ``overlap_buckets > 1`` attaches a ``rounds.Overlap`` spec to both round
+    kinds — the sim prices the exposed comm tail, the lowering chunks the
+    gradient reduce, bytes stay bit-identical."""
     mesh = make_test_mesh(data=1, model=1)
     ho = HOSGDConfig(tau=tau, mu=mu, m=cluster.m, lr=lr, zo_lr=zo_lr,
                      seed=seed, engine=engine)
     opt = opt or sgd(const_schedule(lr))
     wire = R.Wire(codec, compress_mode, seed=seed)
+    overlap = R.Overlap(overlap_buckets) if overlap_buckets > 1 else None
     program = R.ho_sgd_program(loss_fn, ho, opt, name=name, wire=wire,
-                               tau_schedule=tau_schedule, zo_only=zo_only)
+                               tau_schedule=tau_schedule, zo_only=zo_only,
+                               overlap=overlap)
     ledger = CommLedger()
     fo = make_fo_step(loss_fn, mesh, opt, compressor=codec, seed=seed,
-                      compress_mode=compress_mode, m=cluster.m)
+                      compress_mode=compress_mode, m=cluster.m,
+                      buckets=overlap_buckets)
     zo = make_zo_step(loss_fn, mesh, ho, opt, m=cluster.m)
     fo_j = ledger.wrap("fo", jax.jit(fo))
     zo_j = ledger.wrap("zo", jax.jit(zo))
@@ -604,6 +657,7 @@ def make_sim_methods(
     engine: str = "fused",
     compress_mode: str = "per_worker",
     which: Optional[List[str]] = None,
+    overlap_buckets: int = 1,
 ) -> Dict[str, SimMethod]:
     """Build the paper's method zoo as replayable ``SimMethod``s.
 
@@ -612,7 +666,9 @@ def make_sim_methods(
     priced at its booked wire bytes — ``compress_mode`` picks the faithful
     per-worker encode (``nbytes`` × live workers) or the legacy
     post-reduction simulation.  ``tau_schedule`` drives ``ho_sgd_adaptive``
-    (default: linear ramp 2 -> tau over 10*tau iters).
+    (default: linear ramp 2 -> tau over 10*tau iters).  ``overlap_buckets``
+    buckets the HO-family collectives (time only, never bytes); the
+    averaging baselines keep the strict compute-then-communicate price.
     """
     d = sum(int(x.size) for x in jax.tree.leaves(params_like))
     zo_lr = zo_lr if zo_lr is not None else lr * 30.0 / d
@@ -620,7 +676,7 @@ def make_sim_methods(
     sched = tau_schedule or (
         lambda t: int(round(2 + (tau - 2) * min(t, horizon) / horizon)))
     kw = dict(lr=lr, mu=mu, seed=seed, engine=engine,
-              compress_mode=compress_mode)
+              compress_mode=compress_mode, overlap_buckets=overlap_buckets)
     avg_kw = dict(tau=tau, lr=lr, compress_mode=compress_mode)
     builders: Dict[str, Callable[[], SimMethod]] = {
         "ho_sgd": lambda: _ho_family(

@@ -108,6 +108,37 @@ def serve_compute_model(cfg, flops_per_sec: float = 1e12) -> ComputeModel:
                         flops_per_sec=flops_per_sec)
 
 
+@dataclass(frozen=True)
+class StepOverheads:
+    """Per-step fixed serving overheads (ROADMAP serving follow-up (4)).
+
+    ``dispatch_s`` is charged once per priced program launch — each prefill
+    bucket and each decode step (host-side dispatch, argument staging);
+    ``sample_s`` once per decode step (sampling + detokenize host work).
+    Both are fixed per STEP, not per token, which is what makes the slots
+    axis price batching amortization: a decode step over ``live`` slots
+    spreads the same overhead across ``live`` tokens, so tokens/sec now
+    rises with slot count instead of being FLOP-flat.  Both replay paths
+    (continuous and the seed synchronous batch) charge the identical
+    discipline, so the comparison stays fair; the zero default keeps every
+    pre-overhead pin bit-identical.
+    """
+
+    dispatch_s: float = 0.0
+    sample_s: float = 0.0
+
+    def __post_init__(self):
+        assert self.dispatch_s >= 0.0 and self.sample_s >= 0.0
+
+    @property
+    def decode_s(self) -> float:
+        return self.dispatch_s + self.sample_s
+
+
+#: the zero-overhead default (pure-FLOP pricing, the pre-overhead contract)
+NO_OVERHEADS = StepOverheads()
+
+
 def _percentile(vals: Sequence[float], q: float) -> float:
     """Deterministic nearest-rank percentile (no interpolation)."""
     s = sorted(vals)
@@ -117,10 +148,12 @@ def _percentile(vals: Sequence[float], q: float) -> float:
     return float(s[k])
 
 
-def replay(engine, spec: TrafficSpec, compute: ComputeModel) -> TrafficResult:
+def replay(engine, spec: TrafficSpec, compute: ComputeModel,
+           overheads: StepOverheads = NO_OVERHEADS) -> TrafficResult:
     """Drive a fresh ``serving.Engine`` open-loop under ``spec``, pricing
-    every scheduler step with ``compute``.  Returns the event trace, the
-    per-request latency table and summary statistics.
+    every scheduler step with ``compute`` plus the per-step fixed
+    ``overheads`` (dispatch per launch, sampling per decode step).  Returns
+    the event trace, the per-request latency table and summary statistics.
     """
     import time as _time
 
@@ -154,12 +187,13 @@ def replay(engine, spec: TrafficSpec, compute: ComputeModel) -> TrafficResult:
         rep = engine.step()
         prefill_clock: Dict[int, float] = {}
         for rid, L, bucket in rep.admitted:
-            clock += compute.time(fevals=bucket, gevals=0)
+            clock += compute.time(fevals=bucket, gevals=0) + overheads.dispatch_s
             prefill_clock[rid] = clock
             ttft[rid] = clock - arrival_t[rid]
             events.append(("prefill", rid, L, bucket, clock))
         if rep.live:
-            clock += compute.time(fevals=rep.live, gevals=0)
+            clock += (compute.time(fevals=rep.live, gevals=0)
+                      + overheads.dispatch_s + overheads.sample_s)
             events.append(("decode", rep.live, len(rep.emitted), clock))
         total_tokens += len(rep.emitted)
         for rid, phase in rep.finished:
@@ -188,7 +222,8 @@ def replay(engine, spec: TrafficSpec, compute: ComputeModel) -> TrafficResult:
 
 
 def replay_seed_sync(spec: TrafficSpec, compute: ComputeModel,
-                     batch: int) -> TrafficResult:
+                     batch: int,
+                     overheads: StepOverheads = NO_OVERHEADS) -> TrafficResult:
     """Price the SEED synchronous batch path on the same arrival trace.
 
     Semantics of the seed ``Engine.generate`` under an offline driver that
@@ -197,8 +232,10 @@ def replay_seed_sync(spec: TrafficSpec, compute: ComputeModel,
     left-padded ``B × Lmax`` rectangle; decode pays ``B`` tokens per step
     for ``max(max_new) - 1`` steps (no EOS, no early retirement — every
     request is carried to the rectangle's end, only its own ``max_new``
-    tokens count as useful).  Pricing-only: token values cannot change the
-    seed path's cost, so nothing is generated.
+    tokens count as useful).  Per-step ``overheads`` follow the same
+    discipline as ``replay``: dispatch per launch, sampling per decode
+    step.  Pricing-only: token values cannot change the seed path's cost,
+    so nothing is generated.
     """
     assert batch >= 1
     arrivals = poisson_trace(spec)
@@ -213,8 +250,11 @@ def replay_seed_sync(spec: TrafficSpec, compute: ComputeModel,
         start = max(clock, ready)
         l_max = max(len(a.prompt) for a in group)
         steps = max(a.max_new for a in group)
-        first = start + compute.time(fevals=B * l_max, gevals=0)
-        finish = first + (steps - 1) * compute.time(fevals=B, gevals=0)
+        first = start + compute.time(fevals=B * l_max, gevals=0) \
+            + overheads.dispatch_s
+        finish = first + (steps - 1) * (compute.time(fevals=B, gevals=0)
+                                        + overheads.dispatch_s
+                                        + overheads.sample_s)
         events.append(("batch", g0 // batch, B, l_max, steps, start, finish))
         for j, a in enumerate(group):
             rid = g0 + j

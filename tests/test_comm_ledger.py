@@ -195,6 +195,32 @@ def test_per_worker_fo_encode_books_nbytes_times_workers(m):
         assert pw == legacy
 
 
+def test_bucketed_fo_lowering_books_identical_bytes():
+    """The overlap contract (ISSUE 7): bucketing the FO all-reduce changes
+    WHEN bytes move (chunk k's collective overlaps chunk k+1's compute),
+    never HOW MANY — the ledger must book bit-identical bytes for every
+    bucket count, dense and compressed alike."""
+    from repro.core.distributed import make_fo_step
+    mesh = make_test_mesh(data=1, model=1)
+    d = 64
+    opt = sgd(const_schedule(0.05))
+
+    def fo_bytes(buckets, compressor=None):
+        fo = make_fo_step(quad_loss, mesh, opt, compressor=compressor, m=1,
+                          buckets=buckets)
+        ledger = CommLedger()
+        fo_j = ledger.wrap("fo", jax.jit(fo))
+        params = {"x": jnp.zeros((d,), jnp.float32)}
+        fo_j(jnp.int32(0), params, opt.init(params),
+             {"t": jnp.ones((2, d), jnp.float32)})
+        return ledger.bytes_per_step("fo")
+
+    assert [fo_bytes(b) for b in (1, 2, 8)] == [4 * d] * 3
+    codec = qsgd(4)
+    assert ({fo_bytes(b, codec) for b in (1, 2, 8)}
+            == {codec.nbytes(d)})
+
+
 def test_round_executor_books_nbytes_times_active_workers():
     """The round IR's wire model through a ledger-wrapped executor: a
     per-worker-encoded all_reduce over the LIVE membership books

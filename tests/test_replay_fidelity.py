@@ -120,13 +120,22 @@ def test_staleness_views_survive_bulk_rollback():
 
 
 def test_staleness_divergence_requires_lagging_workers():
-    """Homogeneous cluster, no jitter: nobody ever lags, every view is
-    current, and the per-worker replay stays on the monolithic fast path —
-    bit-identical even with max_staleness > 0."""
-    spec = BASE.with_(max_staleness=2)
+    """Homogeneous cluster, no jitter, contention off: nobody ever lags,
+    every view is current, and the per-worker replay stays on the
+    monolithic fast path — bit-identical even with max_staleness > 0.
+
+    With the default shared-link contention, even homogeneous async
+    exchanges serialize FIFO through the pod link, so workers genuinely
+    finish at different times and stale views engage — the latency-honest
+    counterpart, pinned below."""
+    spec = BASE.with_(max_staleness=2, contention=False)
     pw = run(spec, "per_worker")
     mono = run(spec, "monolithic")
     assert pw.losses == mono.losses and pw.trace == mono.trace
+    # contention on (the default): the serialized link staggers otherwise
+    # identical workers, lagging views are real, trajectories diverge
+    contended = run(BASE.with_(max_staleness=2), "per_worker")
+    assert contended.losses != mono.losses
 
 
 # --------------------------------------------------------------------------- #

@@ -21,6 +21,8 @@ from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import Engine, SlotKVCache, ServeConfig, sample_key
 from repro.sim.traffic import (
+    NO_OVERHEADS,
+    StepOverheads,
     TrafficSpec,
     poisson_trace,
     replay,
@@ -353,6 +355,79 @@ def test_traffic_open_loop_arrivals(qwen):
     assert traces[0] == traces[1]
     arr = poisson_trace(spec)
     assert [e[2] for e in traces[0]] == [a.t for a in arr]
+
+
+def test_step_overheads_zero_default_and_determinism(qwen):
+    """The zero-overhead default is bit-identical to explicit NO_OVERHEADS
+    (every pre-overhead pin survives), and nonzero per-step overheads keep
+    the determinism contract while strictly slowing the replay."""
+    cfg, params = qwen
+    spec = TrafficSpec(rate=300.0, n_requests=12, prompt_lens=(4, 9),
+                       out_lens=(3, 8), vocab=cfg.vocab_size, seed=5)
+    cm = serve_compute_model(cfg, flops_per_sec=1e9)
+    base = replay(traffic_engine(cfg, params, spec, 3), spec, cm)
+    explicit = replay(traffic_engine(cfg, params, spec, 3), spec, cm,
+                      NO_OVERHEADS)
+    assert base.events == explicit.events and base.rows == explicit.rows
+    oh = StepOverheads(dispatch_s=1e-3, sample_s=2e-4)
+    a = replay(traffic_engine(cfg, params, spec, 3), spec, cm, oh)
+    b = replay(traffic_engine(cfg, params, spec, 3), spec, cm, oh)
+    assert a.events == b.events and a.rows == b.rows and a.summary == b.summary
+    assert a.summary["makespan_s"] > base.summary["makespan_s"]
+    assert a.summary["tok_per_sec"] < base.summary["tok_per_sec"]
+    assert a.summary["total_tokens"] == base.summary["total_tokens"]
+
+
+def test_seed_sync_overhead_pricing_closed_form_and_amortization():
+    """Per-step overheads on the seed synchronous path price EXACTLY
+    dispatch per launch + sampling per decode step: the makespan delta vs
+    the zero-overhead run equals the closed form summed over batch groups —
+    and widening the batch amortizes it (fewer launches for the same
+    tokens), which is the follow-up's whole point."""
+    from repro.sim.costs import ComputeModel
+
+    spec = TrafficSpec(rate=1e4, n_requests=12, prompt_lens=(4, 12),
+                       out_lens=(4, 8), seed=7)
+    # compute times (>= 4 ms per prefill) dwarf the ~1.2 ms arrival span, so
+    # every group after the first starts clock-bound and the overhead delta
+    # is purely additive
+    cm = ComputeModel(fwd_flops=1e6, flops_per_sec=1e9)
+    oh = StepOverheads(dispatch_s=2e-4, sample_s=5e-5)
+    arr = poisson_trace(spec)
+    deltas = {}
+    for B in (1, 4):
+        base = replay_seed_sync(spec, cm, batch=B)
+        over = replay_seed_sync(spec, cm, batch=B, overheads=oh)
+        groups = [arr[i:i + B] for i in range(0, len(arr), B)]
+        expect = sum(oh.dispatch_s
+                     + (max(a.max_new for a in g) - 1) * oh.decode_s
+                     for g in groups)
+        delta = over.summary["makespan_s"] - base.summary["makespan_s"]
+        assert delta == pytest.approx(expect)
+        assert over.summary["total_tokens"] == base.summary["total_tokens"]
+        deltas[B] = delta
+    assert deltas[4] < deltas[1]          # batching amortizes the overhead
+
+
+def test_overheads_make_slots_axis_price_amortization(qwen):
+    """With per-step fixed overheads the slots axis is no longer FLOP-flat:
+    a decode step over more live slots spreads the same dispatch+sample cost
+    over more tokens, so the wide engine's throughput advantage over the
+    1-slot engine strictly GROWS when overheads turn on."""
+    cfg, params = qwen
+    spec = TrafficSpec(rate=500.0, n_requests=12, prompt_lens=(4, 12),
+                       out_lens=(4, 8), vocab=cfg.vocab_size, seed=13)
+    cm = serve_compute_model(cfg, flops_per_sec=1e9)
+    oh = StepOverheads(dispatch_s=1e-3, sample_s=2e-4)
+
+    def tps(slots, overheads):
+        r = replay(traffic_engine(cfg, params, spec, slots), spec, cm,
+                   overheads)
+        return r.summary["tok_per_sec"]
+
+    gain_flat = tps(6, NO_OVERHEADS) / tps(1, NO_OVERHEADS)
+    gain_oh = tps(6, oh) / tps(1, oh)
+    assert gain_oh > gain_flat
 
 
 def test_traffic_continuous_beats_seed_sync(qwen):

@@ -18,10 +18,14 @@ from repro.opt.optimizers import const_schedule, sgd
 from repro.sim import (
     ClusterSpec,
     CollectiveModel,
+    LinkContention,
     LinkModel,
+    SharedLink,
     Topology,
     compute_model_for,
+    exposed_comm_time,
     make_sim_methods,
+    overlapped_step_time,
     simulate,
 )
 
@@ -158,7 +162,7 @@ def test_collective_degenerate_cases():
     assert gm.all_reduce_time(NBYTES, 1) == 0.0
 
 
-def _sim_quad(spec, n_iters=8, tau=4):
+def _sim_quad(spec, n_iters=8, tau=4, overlap=1):
     def quad(params, batch):
         return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
 
@@ -170,7 +174,7 @@ def _sim_quad(spec, n_iters=8, tau=4):
             yield batch
 
     sm = make_sim_methods(quad, params, spec, tau=tau, lr=0.1, zo_lr=0.05,
-                          which=["ho_sgd"])["ho_sgd"]
+                          which=["ho_sgd"], overlap_buckets=overlap)["ho_sgd"]
     return simulate(sm, params, batches(), spec, n_iters,
                     compute=compute_model_for(params, spec, 2))
 
@@ -196,6 +200,96 @@ def test_sim_bytes_stay_ledger_booked_under_topologies(spec_kw):
     assert res.bytes_total == 2 * 4 * d + 6 * 4 * m
     expect_comm = sum(spec.collective_time(b, m) for b in res.comm_bytes)
     assert res.comm_s == pytest.approx(expect_comm)
+
+
+# --------------------------------------------------------------------------- #
+# Overlap-aware pricing: the exposed-comm closed form must match
+# max(0, comm - compute*(B-1)/B) per collective kind, degenerate to the
+# strict price at B=1, and the simulator must price whole runs off exactly
+# this formula while booking bit-identical bytes overlap on vs off.
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", ["flat", "ring", "tree"])
+@pytest.mark.parametrize("w", [2, 4, 8])
+def test_exposed_comm_closed_form(kind, w):
+    cm = CollectiveModel(link=LINK, kind=kind)
+    comm = cm.all_reduce_time(NBYTES, w)
+    assert comm > 0.0
+    # B=1 degenerates to the strict compute-then-communicate price
+    assert exposed_comm_time(cm, NBYTES, w, 1, comm) == pytest.approx(comm)
+    # partial hiding: only (B-1)/B of the compute can cover traffic
+    for B in (2, 4, 8):
+        compute_s = comm            # compute exactly as long as the exchange
+        expect = comm - compute_s * (B - 1) / B
+        assert exposed_comm_time(cm, NBYTES, w, B, compute_s) \
+            == pytest.approx(expect)
+        assert overlapped_step_time(cm, NBYTES, w, B, compute_s) \
+            == pytest.approx(compute_s + expect)
+    # enough compute hides everything; exposure never goes negative
+    assert exposed_comm_time(cm, NBYTES, w, 4, 100.0 * comm) == 0.0
+    # no bytes: nothing to expose regardless of bucketing
+    assert exposed_comm_time(cm, 0, w, 4, 1.0) == 0.0
+
+
+def test_shared_link_two_transfer_sharing():
+    """The README contention pin: two transfers of duration g both ready at
+    T complete at T+g and T+2g (FIFO serialization); after the link idles,
+    a later transfer starts unimpeded; zero durations pass through."""
+    g, T = 0.25, 10.0
+    link = SharedLink()
+    assert link.acquire(T, g) == pytest.approx(T + g)
+    assert link.acquire(T, g) == pytest.approx(T + 2 * g)
+    assert link.acquire(T + 5.0, g) == pytest.approx(T + 5.0 + g)
+    assert link.acquire(0.0, 0.0) == 0.0          # no reservation
+    assert link.free_at == pytest.approx(T + 5.0 + g)
+
+
+def test_link_contention_routes_pod_then_inter():
+    """2-pod, 4-worker routing: same-pod transfers serialize on their pod
+    link, cross-pod components serialize on the single inter link."""
+    lc = LinkContention(m=4, pods=2)
+    assert [lc.pod_of(w) for w in range(4)] == [0, 0, 1, 1]
+    # workers 0 and 1 share pod link 0: intra components serialize
+    assert lc.transfer(0, 0.0, intra_s=1.0) == pytest.approx(1.0)
+    assert lc.transfer(1, 0.0, intra_s=1.0) == pytest.approx(2.0)
+    # worker 2 is on pod link 1 — no intra contention with pod 0 — but its
+    # inter component queues behind nothing yet
+    assert lc.transfer(2, 0.0, intra_s=1.0, inter_s=0.5) == pytest.approx(1.5)
+    # worker 3 contends on BOTH: pod link 1 busy until 2.0, inter until 1.5
+    assert lc.transfer(3, 0.0, intra_s=1.0, inter_s=0.5) == pytest.approx(2.5)
+    # clone/adopt: tentative planning never leaks into the real state
+    trial = lc.clone()
+    trial.transfer(0, 10.0, intra_s=1.0)
+    assert lc.pod_links[0].free_at == pytest.approx(2.0)
+    lc.adopt(trial)
+    assert lc.pod_links[0].free_at == pytest.approx(11.0)
+
+
+@pytest.mark.parametrize("kind", ["ring", "tree"])
+@pytest.mark.parametrize("buckets", [2, 8])
+def test_sim_overlap_prices_exposed_comm_and_keeps_bytes(kind, buckets):
+    """End-to-end: an overlapped run's comm seconds equal the closed-form
+    exposed time summed over the replayed rounds (FO books 4d, ZO 4m; each
+    round's overlappable compute is ITS OWN critical-path dt), while every
+    byte count stays bit-identical to the strict B=1 run."""
+    d, m = 64, 4
+    spec = ClusterSpec(m=m, flops_per_sec=1e9, bandwidth=1e6, seed=0,
+                       collective=kind)
+    strict = _sim_quad(spec, overlap=1)
+    res = _sim_quad(spec, overlap=buckets)
+    assert res.bytes_total == strict.bytes_total
+    assert res.comm_bytes == strict.comm_bytes
+    # per-round closed form: 2 FO rounds (geval: 3x fwd flops), 6 ZO rounds
+    # (2 fevals), fwd = 2*d*per_worker_batch FLOPs on every worker
+    cm = spec.collective_model
+    fwd = 2.0 * d * 2
+    dt_fo = 3.0 * fwd / spec.flops_per_sec
+    dt_zo = 2.0 * fwd / spec.flops_per_sec
+    expect = (2 * exposed_comm_time(cm, 4 * d, m, buckets, dt_fo)
+              + 6 * exposed_comm_time(cm, 4 * m, m, buckets, dt_zo))
+    assert res.comm_s == pytest.approx(expect)
+    assert res.comm_s < strict.comm_s       # overlap strictly helps here
+    assert res.compute_s == pytest.approx(strict.compute_s)
+    assert res.losses == strict.losses      # pricing only, math untouched
 
 
 def test_csvlogger_context_manager_closes_on_exception(tmp_path):

@@ -34,7 +34,7 @@ def quad_problem():
     return params, batch
 
 
-def run(spec, which="ho_sgd", replay="per_worker"):
+def run(spec, which="ho_sgd", replay="per_worker", overlap=1):
     params, batch = quad_problem()
 
     def batches():
@@ -42,7 +42,8 @@ def run(spec, which="ho_sgd", replay="per_worker"):
             yield batch
 
     sm = make_sim_methods(quad_loss, params, spec, tau=TAU, lr=0.1,
-                          zo_lr=0.05, which=[which])[which]
+                          zo_lr=0.05, which=[which],
+                          overlap_buckets=overlap)[which]
     compute = compute_model_for(params, spec, 2)
     return simulate(sm, params, batches(), spec, N_ITERS, compute=compute,
                     replay=replay)
@@ -86,12 +87,17 @@ def scenario(base: ClusterSpec, name: str) -> ClusterSpec:
 SCENARIOS = ["sync", "async2", "elastic", "2pod_ring"]
 
 
+@pytest.mark.parametrize("overlap", [1, 4])
 @pytest.mark.parametrize("replay", ["per_worker", "monolithic"])
 @pytest.mark.parametrize("case_seed", [11, 29])
 @pytest.mark.parametrize("name", SCENARIOS)
-def test_same_spec_bit_identical_trace(case_seed, name, replay):
+def test_same_spec_bit_identical_trace(case_seed, name, replay, overlap):
+    """Overlapped rounds (bucketed collectives) and shared-link contention
+    (on by default; exercised by async2) must preserve the bit-identical
+    replay contract, not just the strict compute-then-communicate path."""
     spec = scenario(random_base_spec(case_seed), name)
-    r1, r2 = run(spec, replay=replay), run(spec, replay=replay)
+    r1 = run(spec, replay=replay, overlap=overlap)
+    r2 = run(spec, replay=replay, overlap=overlap)
     assert r1.trace == r2.trace           # bit-identical, floats included
     assert r1.times == r2.times
     assert r1.losses == r2.losses
