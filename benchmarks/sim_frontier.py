@@ -68,6 +68,53 @@ def fmt(v):
     return str(v)
 
 
+def trace_report(args, acceptance, results, B, tau, batch, params):
+    """Derive the overlap headline from the exported trace ALONE.
+
+    Writes each bucketed cell's spans as a Perfetto JSON
+    (``BENCH_sim_frontier_trace_<topo>_<method>.json`` — picked up by the
+    same CI artifact glob as the benchmark dumps), then recomputes the
+    attribution purely from the file and asserts the PR-7 claim in trace
+    vocabulary: HO-SGD's exposed-comm fraction ≤ 0.05 vs sync-SGD's ≥ 0.2,
+    on both topologies — with the trace's ``comm.exposed`` seconds
+    cross-checked against the ``costs.exposed_comm_time`` closed forms
+    (one per iteration, from the ledger bytes and the round's order) to
+    within 1e-9.
+    """
+    from repro.obs import attribution_from_file, format_report, write_trace
+    from repro.sim.costs import exposed_comm_time
+
+    for tag in ("ring-1pod", "ring-2pod"):
+        for method, kind in (("ho_sgd", "hidden"), ("sync_sgd", "exposed")):
+            label = f"{tag}][{method}][B={B}"
+            res, cluster = results[label]
+            path = os.path.join(
+                REPO_ROOT, f"BENCH_sim_frontier_trace_{tag}_{method}.json")
+            write_trace(path, res.spans, title=f"overlap:{label}")
+            att = attribution_from_file(path)
+            for line in format_report(att, title=f"trace[{label}]"):
+                print(line)
+            frac = att["exposed_comm_fraction"]
+            if method == "ho_sgd":
+                acceptance[f"trace_ho_comm_hidden[{tag}]"] = frac <= 0.05
+            else:
+                acceptance[f"trace_sync_comm_exposed[{tag}]"] = frac >= 0.20
+            # closed-form cross-check: Σ_t exposed_comm_time(bytes_t, dt_t)
+            compute = compute_model_for(params, cluster, batch // cluster.m)
+            cm = cluster.collective_model
+            closed = 0.0
+            for order, nb in zip(res.orders, res.comm_bytes):
+                dt = (compute.time(2.0, 0.0) if order == 0
+                      else compute.time(0.0, 1.0))
+                closed += exposed_comm_time(cm, nb, cluster.m, B, dt)
+            traced = att["kind_seconds"]["comm.exposed"]
+            acceptance[f"trace_closed_form[{tag}][{method}]"] = \
+                abs(traced - closed) <= 1e-9
+            print(f"sim/trace_cross_check[{label}],0,{fmt(traced)},"
+                  f"{fmt(closed)},{fmt(abs(traced - closed))}")
+            print(f"# wrote {path}")
+
+
 def overlap_axis(args, ds, params):
     """Latency-honest axis: compute/communication overlap + per-link
     contention (the ISSUE-7 acceptance criterion).
@@ -97,6 +144,7 @@ def overlap_axis(args, ds, params):
         "ring-2pod": Topology(pods=2, inter_alpha=1e-6, inter_bandwidth=1e8),
     }
     rows = []
+    results = {}   # label -> (SimResult, cluster) for --trace-report
 
     def cell(label, cluster, method, buckets):
         sm = make_sim_methods(mlp_loss, params, cluster, tau=tau, lr=args.lr,
@@ -105,6 +153,7 @@ def overlap_axis(args, ds, params):
         compute = compute_model_for(params, cluster, batch // cluster.m)
         res = simulate(sm, params, batches(ds, batch, seed=args.seed),
                        cluster, iters, compute=compute)
+        results[label] = (res, cluster)
         row = dict(config=label, method=method, buckets=buckets,
                    contention=cluster.contention,
                    staleness=cluster.max_staleness,
@@ -137,6 +186,9 @@ def overlap_axis(args, ds, params):
             and ho_on["comm_bytes"] == ho_off["comm_bytes"]
             and sy_on["bytes_total"] == sy_off["bytes_total"]
             and sy_on["comm_bytes"] == sy_off["comm_bytes"])
+
+    if args.trace_report:
+        trace_report(args, acceptance, results, B, tau, batch, params)
 
     # contention sub-axis: unbarriered ZO exchanges through shared links
     for tag, topo in topos.items():
@@ -210,6 +262,11 @@ def main(argv=None):
     ap.add_argument("--overlap-out",
                     default=os.path.join(REPO_ROOT,
                                          "BENCH_sim_frontier_overlap.json"))
+    ap.add_argument("--trace-report", action="store_true",
+                    help="export the bucketed overlap cells as Perfetto "
+                         "traces and re-derive the exposed-comm headline "
+                         "(ho ≤ 0.05, sync ≥ 0.2) from the trace files "
+                         "alone, cross-checked against the closed forms")
     args = ap.parse_args(argv)
 
     taus = [2, 8] if args.smoke else [2, 4, 8, 16]

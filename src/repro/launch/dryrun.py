@@ -157,6 +157,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, step: str,
         text = compiled.as_text()
         ms = mesh.shape["model"]
         rec["collectives_raw"] = hlo.collective_bytes(text, ms)
+        rec["async_overlap"] = hlo.async_overlap_stats(text)
         rec["hlo_bytes"] = len(text)
         if save_hlo:
             import gzip
@@ -196,6 +197,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, step: str,
     if verbose:
         c = rec["cost"]
         mem = rec["memory"]
+        ov = rec["async_overlap"]
         print(
             f"[ok] {arch} x {shape_name} x {mesh_name} ({step}): "
             f"flops={c['flops']:.3e} bytes={c['bytes']:.3e} "
@@ -204,6 +206,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, step: str,
             f"temp={mem.get('temp_size_in_bytes', 0):.3e} "
             f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)"
         )
+        if ov["pairs"]:
+            print(f"     async collectives: {ov['pairs']} start/done pairs, "
+                  f"{ov['overlapped_pairs']} overlapped, mean gap "
+                  f"{ov['mean_gap']:.1f} ops, max {ov['max_gap']}")
     return rec
 
 
@@ -219,7 +225,24 @@ def main():
     ap.add_argument("--force", action="store_true")
     ap.add_argument("--save-hlo", action="store_true",
                     help="also write <tag>.hlo.txt.gz of the full lowering")
+    ap.add_argument("--xla-overlap", action="store_true",
+                    help="compile under the async-collective + latency-"
+                         "hiding scheduler flags (launch.xla) so the "
+                         "recorded async_overlap stats show what the "
+                         "scheduler actually hid")
     args = ap.parse_args()
+
+    if args.xla_overlap:
+        # must land before the first device query initializes the backend;
+        # the flags are GPU-only and XLA aborts on unknown CPU flags, so on
+        # the forced-host-device matrix we skip them (async_overlap stats
+        # are still parsed from whatever HLO the backend schedules)
+        if any(os.environ.get(k, "").lower() in ("cpu",)
+               for k in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME")):
+            print("xla-overlap: CPU backend — GPU scheduler flags skipped")
+        else:
+            from repro.launch.xla import enable_collective_overlap
+            enable_collective_overlap()
 
     os.makedirs(args.out, exist_ok=True)
     archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]

@@ -9,7 +9,7 @@ The same correction applies to collective bytes parsed from the HLO text.
 from __future__ import annotations
 
 import re
-from typing import Dict
+from typing import Dict, Tuple
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -109,6 +109,55 @@ def collective_bytes(hlo_text: str, model_size: int = 16) -> Dict[str, float]:
         out["axis_" + _classify_axis(line, model_size)] += b
     out["total"] = sum(out[k] for k in _COLLECTIVES)
     return out
+
+
+_LHS_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=")
+_START_RE = re.compile(
+    r"=\s*[^=]*\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)-start\(")
+_DONE_RE = re.compile(
+    r"=\s*[^=]*\b(?:all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)-done\(\s*%?([\w.\-]+)")
+
+
+def async_overlap_stats(hlo_text: str) -> Dict:
+    """How much work the scheduler put between each async collective's
+    ``-start`` and its matching ``-done``.
+
+    Walks the HLO text counting instruction lines (`` = `` assignments);
+    for every ``<kind>-start`` whose ``-done`` consumes it, the *gap* is the
+    number of instructions scheduled strictly between the two — the direct
+    HLO-level witness of compute/comm overlap (gap 0 = the collective is
+    synchronous in effect, whatever its op names say).  Returns::
+
+        {"pairs": N, "overlapped_pairs": M,          # M pairs with gap > 0
+         "by_kind": {kind: count}, "mean_gap": g, "max_gap": G}
+    """
+    open_starts: Dict[str, Tuple[str, int]] = {}   # lhs name -> (kind, idx)
+    gaps = []
+    kinds: Dict[str, int] = {}
+    idx = 0
+    for line in hlo_text.splitlines():
+        lhs = _LHS_RE.match(line)
+        if not lhs:
+            continue
+        idx += 1
+        m = _START_RE.search(line)
+        if m:
+            open_starts[lhs.group(1)] = (m.group(1), idx)
+            continue
+        m = _DONE_RE.search(line)
+        if m and m.group(1) in open_starts:
+            kind, start_idx = open_starts.pop(m.group(1))
+            gaps.append(idx - start_idx - 1)
+            kinds[kind] = kinds.get(kind, 0) + 1
+    return {
+        "pairs": len(gaps),
+        "overlapped_pairs": sum(1 for g in gaps if g > 0),
+        "by_kind": kinds,
+        "mean_gap": (sum(gaps) / len(gaps)) if gaps else 0.0,
+        "max_gap": max(gaps) if gaps else 0,
+    }
 
 
 def extrapolate(c1: float, c2: float, n_groups: int) -> float:

@@ -68,6 +68,9 @@ def main(argv=None):
                     help="traffic mode: simulated accelerator throughput")
     ap.add_argument("--log", default=None,
                     help="CSV path for per-request latency rows")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="traffic mode: write a Perfetto trace of the "
+                         "replay (one lane per serving slot)")
     args = ap.parse_args(argv)
 
     cfg = size_override(get_config(args.arch), args.reduce)
@@ -83,19 +86,29 @@ def main(argv=None):
             eos_id=args.eos_id, slots=args.slots),
             key=jax.random.key(args.seed) if args.temperature > 0 else None)
         cm = serve_compute_model(cfg, args.flops_per_sec)
-        res = replay(eng, spec, cm)
+        tracer = None
+        if args.trace:
+            from repro.obs import Tracer
+            tracer = Tracer(clock="sim")
+        res = replay(eng, spec, cm, tracer=tracer)
         sync = replay_seed_sync(spec, cm, batch=args.slots)
         fields = ["rid", "arrival", "prompt_len", "max_new", "ttft",
-                  "latency", "finish"]
+                  "queue_s", "service_s", "latency", "finish"]
         with CSVLogger(args.log, fields) as log:
             for row in res.rows:
                 log.log(**row)
+        if tracer is not None:
+            from repro.obs import write_trace
+            write_trace(args.trace, tracer, title=f"serve:{args.traffic}")
+            print(f"wrote trace {args.trace} ({len(tracer.spans)} spans)")
         s = res.summary
         print(f"traffic {args.traffic}: {int(s['n_requests'])} requests, "
               f"{int(s['total_tokens'])} tokens in {s['makespan_s']:.3f} sim-s "
               f"({s['tok_per_sec']:.1f} tok/s; wall {res.wall_s:.2f}s)")
         print(f"  ttft    p50 {s['p50_ttft_s']*1e3:.1f} ms   "
-              f"p99 {s['p99_ttft_s']*1e3:.1f} ms")
+              f"p99 {s['p99_ttft_s']*1e3:.1f} ms   (queue p99 "
+              f"{s['p99_queue_s']*1e3:.1f} ms + service p99 "
+              f"{s['p99_service_s']*1e3:.1f} ms)")
         print(f"  latency p50 {s['p50_latency_s']*1e3:.1f} ms   "
               f"p99 {s['p99_latency_s']*1e3:.1f} ms")
         print(f"  seed-sync baseline (batch={args.slots}): "

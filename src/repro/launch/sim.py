@@ -113,6 +113,10 @@ def main(argv=None):
     ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--log", default=None, help="CSV path")
     ap.add_argument("--json", default=None, help="summary JSON path")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto trace of each method's simulated "
+                         "run (one lane per worker; multi-method runs get "
+                         "OUT.METHOD.json) and print its attribution")
     args = ap.parse_args(argv)
 
     topo = (Topology(pods=args.pods, inter_alpha=args.inter_alpha,
@@ -166,6 +170,15 @@ def main(argv=None):
                 logger.log(method=name, iter=res.steps[i],
                            order=res.orders[i], loss=res.losses[i],
                            t_sim=res.times[i], comm_bytes=res.comm_bytes[i])
+            if args.trace:
+                from repro.obs import attribution, format_report, write_trace
+                path = args.trace if len(sims) == 1 else \
+                    args.trace.replace(".json", f".{name}.json")
+                write_trace(path, res.spans, title=f"sim:{name}")
+                for line in format_report(attribution(res.spans),
+                                          title=f"trace/{name}"):
+                    print(line)
+                print("wrote", path)
             s = res.summary()
             if args.target_loss is not None:
                 s["t_to_target"] = res.time_to_loss(args.target_loss)

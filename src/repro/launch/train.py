@@ -91,6 +91,10 @@ def main(argv=None):
                     help="append the async-collective + latency-hiding "
                          "scheduler XLA flags (launch.xla, composed with "
                          "any user-set XLA_FLAGS, never replacing them)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a wall-clock Perfetto trace: one span per "
+                         "jitted FO/ZO step (ledger bytes attached) plus a "
+                         "cumulative received-bytes counter")
     args = ap.parse_args(argv)
 
     if args.xla_overlap:
@@ -138,6 +142,10 @@ def main(argv=None):
 
         host = token_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
         since_fo = 0
+        tracer = None
+        if args.trace:
+            from repro.obs import Tracer
+            tracer = Tracer(clock="wall")
         with CSVLogger(args.log,
                        ["step", "order", "loss", "dt", "comm_bytes"]) as logger:
             t_prev = time.perf_counter()
@@ -147,11 +155,21 @@ def main(argv=None):
                 else:
                     is_fo, t_step, since_fo = adaptive_tau_decision(
                         t, since_fo, tau_sched(t), args.tau)
+                name = "fo" if is_fo else "zo"
                 step = fo_j if is_fo else zo_j
                 t0 = time.perf_counter()
-                params, opt_state, loss = step(jnp.int32(t_step), params,
-                                               opt_state, batch)
-                loss = float(loss)               # blocks: dispatch is async
+                if tracer is not None:
+                    with tracer.span("compute", "train", name=f"{name}/{t}") as sp:
+                        params, opt_state, loss = step(jnp.int32(t_step),
+                                                       params, opt_state, batch)
+                        loss = float(loss)       # blocks: dispatch is async
+                        sp.nbytes = ledger.bytes_per_step(name)
+                    tracer.counter(tracer.now(), "train", "ledger_bytes",
+                                   ledger.total_bytes())
+                else:
+                    params, opt_state, loss = step(jnp.int32(t_step), params,
+                                                   opt_state, batch)
+                    loss = float(loss)           # blocks: dispatch is async
                 dt_step = time.perf_counter() - t0
                 if t % 10 == 0 or t == args.steps - 1:
                     now = time.perf_counter()
@@ -159,11 +177,20 @@ def main(argv=None):
                           f"loss={loss:.4f} dt={now - t_prev:.2f}s")
                     t_prev = now
                 logger.log(step=t, order=int(is_fo), loss=loss, dt=dt_step,
-                           comm_bytes=ledger.bytes_per_step(
-                               "fo" if is_fo else "zo"))
+                           comm_bytes=ledger.bytes_per_step(name))
             if args.ckpt:
-                path = ckpt_save(args.ckpt, args.steps, jax.device_get(params))
+                if tracer is not None:
+                    with tracer.span("checkpoint", "train", name="ckpt_save"):
+                        path = ckpt_save(args.ckpt, args.steps,
+                                         jax.device_get(params))
+                else:
+                    path = ckpt_save(args.ckpt, args.steps,
+                                     jax.device_get(params))
                 print("checkpoint:", path)
+        if tracer is not None:
+            from repro.obs import write_trace
+            write_trace(args.trace, tracer, title=f"train:{cfg.name}")
+            print(f"wrote trace {args.trace} ({len(tracer.spans)} spans)")
     # dense FO exchange moves gradients in the param dtype (fp32 accumulator
     # when grad_accum microbatches); ZO coefficients are always fp32
     grad_bytes = 4 if cfg.grad_accum > 1 else jnp.dtype(cfg.dtype).itemsize

@@ -25,6 +25,11 @@ class CSVLogger:
             self._writer.writeheader()
 
     def log(self, **row):
+        unknown = set(row) - set(self.fields)
+        if unknown:
+            raise ValueError(
+                f"CSVLogger: unknown keys {sorted(unknown)}; declared fields "
+                f"are {self.fields}")
         if self._writer:
             self._writer.writerow({k: row.get(k, "") for k in self.fields})
             self._fh.flush()

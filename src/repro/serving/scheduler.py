@@ -77,7 +77,10 @@ class Request:
 @dataclass
 class StepReport:
     """What one scheduler step did — the pricing interface for sim.traffic."""
-    admitted: List[Tuple[int, int, int]]   # (rid, prompt_len, bucket_len)
+    admitted: List[Tuple[int, int, int, int]]  # (rid, prompt_len, bucket_len,
+                                               #  slot) — slot AT admission
+                                               # (still valid if the request
+                                               # retired inside the step)
     live: int                              # slots live for the decode step
     emitted: List[Tuple[int, int]]         # (rid, token) appended this step
     finished: List[Tuple[int, str]]        # (rid, phase) retired this step,
@@ -179,9 +182,9 @@ class Scheduler:
             toks[0, :L] = req.prompt
             logits, caches = self._prefill(bucket)(
                 self.params, jnp.asarray(toks), jnp.asarray([L - 1], jnp.int32))
-            report.admitted.append((req.rid, L, bucket))
             tok = self._sample(logits[0], req.key_id, 0)
             slot = self.pool.alloc(req.rid)
+            report.admitted.append((req.rid, L, bucket, slot))
             self.pool.assign(slot, caches, L)
             req.slot = slot
             if not self._append(req, tok, report, "prefill"):

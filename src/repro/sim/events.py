@@ -20,6 +20,8 @@ import heapq
 from dataclasses import dataclass, field
 from typing import List, NamedTuple, Optional, Sequence, Tuple
 
+from repro.obs.trace import Span, worker_lane
+
 
 class Event(NamedTuple):
     time: float
@@ -29,18 +31,45 @@ class Event(NamedTuple):
 
 
 #: what the determinism tests compare: (time, kind, worker) triples in the
-#: exact order the loop committed them.
+#: exact order the loop committed them.  Since the obs layer landed this is
+#: a DERIVED VIEW over the committed spans (``EventLoop.trace``), so the
+#: determinism suites pin the span path for free.
 TraceEntry = Tuple[float, str, int]
+
+#: default span-kind taxonomy for committed legacy event kinds; collective
+#: kinds ("all_reduce", "async_exchange", custom) default to comm.exposed
+_SPAN_KIND = {
+    "compute": "compute",
+    "barrier": "barrier",
+    "fail": "checkpoint",
+    "restore": "checkpoint",
+    "leave": "checkpoint",
+    "rejoin": "checkpoint",
+}
 
 
 @dataclass
 class EventLoop:
-    """Min-heap of future events + the committed trace."""
+    """Min-heap of future events + the committed span list.
+
+    Every commit is a ``repro.obs.trace.Span`` (interval, lane, kind
+    taxonomy, ledger bytes); the historical ``(time, kind, worker)`` tuple
+    trace is derived from the spans that carry a ``src_kind`` — annotation
+    spans (``annotate``) enrich the timeline without entering the tuple
+    view, so the bit-identity contract and the Perfetto export read the
+    SAME committed events.
+    """
 
     _heap: List[Event] = field(default_factory=list)
     _seq: int = 0
     now: float = 0.0
-    trace: List[TraceEntry] = field(default_factory=list)
+    spans: List[Span] = field(default_factory=list)
+
+    @property
+    def trace(self) -> List[TraceEntry]:
+        """The legacy determinism view, derived from the committed spans."""
+        return [(s.t1, s.src_kind, s.worker)
+                for s in self.spans if s.src_kind is not None]
 
     def schedule(self, at: float, kind: str, worker: int = -1) -> Event:
         assert at >= self.now - 1e-12, f"scheduling into the past: {at} < {self.now}"
@@ -53,13 +82,38 @@ class EventLoop:
         """Commit the earliest pending event: advances ``now``, records it."""
         ev = heapq.heappop(self._heap)
         self.now = max(self.now, ev.time)
-        self.trace.append((ev.time, ev.kind, ev.worker))
+        self._commit(ev.time, ev.kind, ev.worker, ev.time, None, 0)
         return ev
 
-    def record(self, at: float, kind: str, worker: int = -1) -> None:
-        """Commit an instantaneous event (no heap round-trip)."""
+    def record(self, at: float, kind: str, worker: int = -1, *,
+               t0: Optional[float] = None, span_kind: Optional[str] = None,
+               nbytes: int = 0) -> None:
+        """Commit an event (no heap round-trip): enters the tuple trace at
+        ``at`` with ``kind``, and the span timeline as ``[t0, at]`` (default
+        instantaneous) of taxonomy kind ``span_kind`` (default mapped from
+        the legacy kind)."""
         self.now = max(self.now, float(at))
-        self.trace.append((float(at), kind, worker))
+        self._commit(float(at), kind, worker, t0, span_kind, nbytes)
+
+    def annotate(self, kind: str, t0: float, t1: float, *, worker: int = -1,
+                 lane: Optional[str] = None, nbytes: int = 0,
+                 name: str = "") -> None:
+        """Add an annotation-only span (never enters the tuple trace):
+        barrier waits, queue/contention waits, overlapped comm."""
+        if t1 <= t0:
+            return
+        self.spans.append(Span(kind, lane or worker_lane(worker),
+                               float(t0), float(t1), name=name,
+                               nbytes=int(nbytes), worker=worker))
+
+    def _commit(self, at: float, kind: str, worker: int,
+                t0: Optional[float], span_kind: Optional[str],
+                nbytes: int) -> None:
+        sk = span_kind or _SPAN_KIND.get(kind, "comm.exposed")
+        self.spans.append(Span(sk, worker_lane(worker),
+                               float(at if t0 is None else t0), float(at),
+                               name=kind, nbytes=int(nbytes), worker=worker,
+                               src_kind=kind))
 
     @property
     def pending(self) -> int:
@@ -113,6 +167,7 @@ def barrier_all_reduce(
     *,
     kind: str = "all_reduce",
     active: Optional[Sequence[int]] = None,
+    nbytes: int = 0,
 ) -> float:
     """The bulk-synchronous collective: per-worker compute, barrier, exchange.
 
@@ -128,15 +183,27 @@ def barrier_all_reduce(
     PA-SGD between averaging rounds).  ``active`` (elastic membership)
     restricts participation: left workers neither compute nor gate the
     barrier.
+
+    Span timeline: each worker's compute interval, a ``barrier`` wait
+    annotation for every worker that finished before the slowest, and one
+    ``comm.exposed`` span ``[sync, done]`` carrying ``nbytes`` (the round's
+    ledger bytes).
     """
     assert len(compute_dts) == clocks.m
     workers = range(clocks.m) if active is None else active
-    for t_done, i in sorted((clocks.t[i] + compute_dts[i], i)
-                            for i in workers):
-        loop.record(t_done, "compute", i)
+    dones = sorted((clocks.t[i] + compute_dts[i], i) for i in workers)
+    for t_done, i in dones:
+        loop.record(t_done, "compute", i, t0=t_done - compute_dts[i])
         clocks.t[i] = t_done
-    done = clocks.barrier(active) + (comm_time if comm_time > 0 else 0.0)
-    loop.record(done, kind if comm_time > 0 else "barrier")
+    sync = clocks.barrier(active)
+    for t_done, i in dones:
+        loop.annotate("barrier", t_done, sync, worker=i, name="barrier.wait")
+    if comm_time > 0:
+        done = sync + comm_time
+        loop.record(done, kind, t0=sync, nbytes=nbytes)
+    else:
+        done = sync
+        loop.record(done, "barrier", nbytes=nbytes)
     clocks.set_all(done, active)
     return done
 
@@ -212,6 +279,18 @@ class LinkContention:
         self.inter.free_at = other.inter.free_at
 
 
+class AsyncEntry(NamedTuple):
+    """One worker's planned unbarriered round: compute ``[start, t_done]``,
+    then an exchange of duration ``comm_s`` ending at ``end`` (any gap
+    between ``t_done`` and ``end - comm_s`` is shared-link queueing)."""
+
+    t_done: float
+    worker: int
+    start: float
+    end: float
+    comm_s: float
+
+
 def plan_async_round(
     clocks: WorkerClocks,
     compute_dts: Sequence[float],
@@ -224,12 +303,12 @@ def plan_async_round(
 
     ``comm_for(i) -> (intra_s, inter_s)`` gives worker ``i``'s exchange
     duration split (overlap-aware: the runner passes the EXPOSED time).
-    Returns ``(entries, trial)`` where ``entries`` is
-    ``[(t_compute_done, worker, t_round_end)]`` in deterministic
-    (time, worker) order and ``trial`` is the advanced CLONE of
-    ``contention`` (or None) — nothing global is mutated, so the runner can
-    price a tentative commit (failure preemption) and only ``adopt`` the
-    link state if the round really lands.
+    Returns ``(entries, trial)`` where ``entries`` is a list of
+    ``AsyncEntry`` in deterministic (time, worker) order and ``trial`` is
+    the advanced CLONE of ``contention`` (or None) — nothing global is
+    mutated, so the runner can price a tentative commit (failure
+    preemption) and only ``adopt`` the link state if the round really
+    lands.
     """
     trial = contention.clone() if contention is not None else None
     entries = []
@@ -240,7 +319,8 @@ def plan_async_round(
             end = trial.transfer(i, t_done, intra_s, inter_s)
         else:
             end = t_done + intra_s + inter_s
-        entries.append((t_done, i, end))
+        entries.append(AsyncEntry(t_done, i, t_done - compute_dts[i], end,
+                                  intra_s + inter_s))
     return entries, trial
 
 
@@ -250,16 +330,29 @@ def commit_async_round(
     entries,
     *,
     kind: str = "async_exchange",
+    nbytes: int = 0,
 ) -> float:
     """Commit a planned unbarriered round: per-worker ``compute`` events in
     the plan's (time, worker) order, clocks advanced to each worker's
     exchange end, one ``kind`` event at the round's commit time (the latest
-    participating clock)."""
-    for t_done, i, end in entries:
-        loop.record(t_done, "compute", i)
-        clocks.t[i] = end
-    done = max(end for _, _, end in entries)
-    loop.record(done, kind)
+    participating clock).
+
+    Span timeline: each worker's compute interval, a ``queue.contention``
+    annotation covering any shared-link wait between compute completion and
+    exchange start, a ``comm.exposed`` annotation for the exchange itself,
+    and the round-commit event as a zero-length ``comm.exposed`` span
+    carrying ``nbytes`` (the round's ledger bytes, booked once)."""
+    for e in entries:
+        loop.record(e.t_done, "compute", e.worker, t0=e.start)
+        comm_t0 = e.end - e.comm_s
+        if comm_t0 - e.t_done > 1e-12:  # real link wait, not float residue
+            loop.annotate("queue.contention", e.t_done, comm_t0,
+                          worker=e.worker, name="link.wait")
+        loop.annotate("comm.exposed", comm_t0, e.end, worker=e.worker,
+                      name="exchange")
+        clocks.t[e.worker] = e.end
+    done = max(e.end for e in entries)
+    loop.record(done, kind, nbytes=nbytes)
     return done
 
 

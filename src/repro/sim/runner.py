@@ -141,6 +141,9 @@ class SimResult:
     evals: List[Tuple[float, float, float]] = field(default_factory=list)
     #: committed (time, kind, worker) entries — the determinism contract
     trace: List[tuple] = field(default_factory=list)
+    #: the committed ``repro.obs`` spans the tuple trace is derived from —
+    #: feed to ``repro.obs.export.write_trace`` / ``report.attribution``
+    spans: List[Any] = field(default_factory=list)
     compute_s: float = 0.0      # critical-path compute seconds
     comm_s: float = 0.0
     feval_s: float = 0.0        # compute seconds spent on function evals
@@ -310,7 +313,7 @@ def simulate(
                     params, state = restored["params"], restored["state"]
                     resume = back + cluster.restart_time
                     loop.record(back, "rejoin", w)
-                    loop.record(resume, "restore", w)
+                    loop.record(resume, "restore", w, t0=back)
                     clocks.t[w] = resume
                     active = sorted(active + [w])
                     res.rejoins += 1
@@ -402,7 +405,7 @@ def simulate(
 
                 entries, trial = plan_async_round(
                     clocks, dts, gate, active, comm_for, contention)
-                done_tent = max(end for _, _, end in entries)
+                done_tent = max(e.end for e in entries)
             else:
                 done_tent = max(clocks.t[i] + dts[i]
                                 for i in active) + exposed_crit
@@ -455,7 +458,7 @@ def simulate(
                     del commit_times[t:]
                     phist = {k: params for k in range(t - 1 - stale, t)}
                 resume = next_fail + cluster.restart_time
-                loop.record(resume, "restore")
+                loop.record(resume, "restore", t0=next_fail)
                 clocks.set_all(resume)
                 if res.failures >= max_failures:
                     break
@@ -470,10 +473,30 @@ def simulate(
             if is_async:
                 if contention is not None and trial is not None:
                     contention.adopt(trial)
-                done = commit_async_round(loop, clocks, entries)
+                round_start = min(e.start for e in entries)
+                done = commit_async_round(loop, clocks, entries,
+                                          nbytes=comm_bytes)
+                # per-worker overlapped share: full collective minus the
+                # exposed tail this worker's own compute could not hide
+                total_f = sum(cm.time_components(comm_bytes, w_live))
+                for e in entries:
+                    hid = total_f - e.comm_s
+                    if hid > 1e-15:
+                        loop.annotate("comm.overlapped",
+                                      max(e.start, e.t_done - hid), e.t_done,
+                                      worker=e.worker, name="overlap")
             else:
+                round_start = min(clocks.t[i] for i in active)
                 done = barrier_all_reduce(loop, clocks, dts, exposed_crit,
-                                          active=active)
+                                          active=active, nbytes=comm_bytes)
+                # the bucketed collective's hidden share rides behind the
+                # round's compute, ending at the barrier point
+                hid = cm.all_reduce_time(comm_bytes, w_live) - exposed_crit
+                if hid > 1e-15:
+                    sync = done - exposed_crit
+                    loop.annotate("comm.overlapped",
+                                  max(round_start, sync - hid), sync,
+                                  name="overlap")
             res.compute_s += dt_crit
             res.comm_s += exposed_crit
             if order == 0:
@@ -513,6 +536,7 @@ def simulate(
         if tmp is not None:
             shutil.rmtree(tmp, ignore_errors=True)
     res.trace = list(loop.trace)
+    res.spans = list(loop.spans)
     res.params = params
     res.state = state
     return res

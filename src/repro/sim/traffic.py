@@ -148,18 +148,41 @@ def _percentile(vals: Sequence[float], q: float) -> float:
     return float(s[k])
 
 
+def _ttft_percentiles(rows: Sequence[Dict]) -> Dict[str, float]:
+    """The shared latency-percentile block, with TTFT decomposed into its
+    queueing (arrival → admission) and service (admission → first token)
+    components — per-row ``ttft == queue_s + service_s`` exactly."""
+    out = {}
+    for key, col in (("ttft", "ttft"), ("latency", "latency"),
+                     ("queue", "queue_s"), ("service", "service_s")):
+        vals = [r[col] for r in rows]
+        out[f"p50_{key}_s"] = _percentile(vals, 0.50)
+        out[f"p99_{key}_s"] = _percentile(vals, 0.99)
+    return out
+
+
 def replay(engine, spec: TrafficSpec, compute: ComputeModel,
-           overheads: StepOverheads = NO_OVERHEADS) -> TrafficResult:
+           overheads: StepOverheads = NO_OVERHEADS,
+           tracer=None) -> TrafficResult:
     """Drive a fresh ``serving.Engine`` open-loop under ``spec``, pricing
     every scheduler step with ``compute`` plus the per-step fixed
     ``overheads`` (dispatch per launch, sampling per decode step).  Returns
     the event trace, the per-request latency table and summary statistics.
+
+    ``tracer`` (a sim-clock ``repro.obs.Tracer``) additionally records each
+    request's lifecycle on its admission slot's lane — ``queue.contention``
+    (arrival → admission), ``prefill`` (admission → first token), ``decode``
+    (first token → retire) — plus a live-slot counter per decode step; the
+    spans are stamped from the SAME clock the pricing advances, so tracing
+    never perturbs the deterministic events/rows/summary.
     """
     import time as _time
 
     assert engine.sc.max_seq >= spec.required_max_seq(), \
         "engine max_seq too small for the traffic mix"
     assert not engine.has_work, "replay needs a fresh engine"
+    if tracer is not None:
+        assert tracer.clock == "sim", "traffic replay stamps simulated time"
     t_wall = _time.perf_counter()
     arrivals = poisson_trace(spec)
     n = len(arrivals)
@@ -168,7 +191,10 @@ def replay(engine, spec: TrafficSpec, compute: ComputeModel,
     prompt_len: Dict[int, int] = {}
     budget: Dict[int, int] = {}
     ttft: Dict[int, float] = {}
+    queue_s: Dict[int, float] = {}
     done: Dict[int, float] = {}
+    lane: Dict[int, str] = {}
+    first_tok: Dict[int, float] = {}
     total_tokens = 0
     clock = 0.0
     i = 0
@@ -186,23 +212,39 @@ def replay(engine, spec: TrafficSpec, compute: ComputeModel,
             continue
         rep = engine.step()
         prefill_clock: Dict[int, float] = {}
-        for rid, L, bucket in rep.admitted:
+        for rid, L, bucket, slot in rep.admitted:
+            admit = clock
             clock += compute.time(fevals=bucket, gevals=0) + overheads.dispatch_s
             prefill_clock[rid] = clock
             ttft[rid] = clock - arrival_t[rid]
+            queue_s[rid] = admit - arrival_t[rid]
             events.append(("prefill", rid, L, bucket, clock))
+            if tracer is not None:
+                from repro.obs.trace import slot_lane
+                lane[rid] = slot_lane(slot)
+                first_tok[rid] = clock
+                tracer.add("queue.contention", lane[rid], arrival_t[rid],
+                           admit, name=f"queue/r{rid}")
+                tracer.add("prefill", lane[rid], admit, clock,
+                           name=f"prefill/{bucket}")
         if rep.live:
             clock += (compute.time(fevals=rep.live, gevals=0)
                       + overheads.dispatch_s + overheads.sample_s)
             events.append(("decode", rep.live, len(rep.emitted), clock))
+            if tracer is not None:
+                tracer.counter(clock, "slots", "live_slots", rep.live)
         total_tokens += len(rep.emitted)
         for rid, phase in rep.finished:
             t_done = prefill_clock[rid] if phase == "prefill" else clock
             done[rid] = t_done
             events.append(("done", rid, phase, t_done))
+            if tracer is not None and phase == "decode":
+                tracer.add("decode", lane[rid], first_tok[rid], t_done,
+                           name=f"decode/r{rid}")
     rows = [
         dict(rid=rid, arrival=arrival_t[rid], prompt_len=prompt_len[rid],
-             max_new=budget[rid], ttft=ttft[rid],
+             max_new=budget[rid], ttft=ttft[rid], queue_s=queue_s[rid],
+             service_s=ttft[rid] - queue_s[rid],
              latency=done[rid] - arrival_t[rid], finish=done[rid])
         for rid in sorted(done)
     ]
@@ -212,10 +254,7 @@ def replay(engine, spec: TrafficSpec, compute: ComputeModel,
         total_tokens=float(total_tokens),
         makespan_s=makespan,
         tok_per_sec=total_tokens / makespan if makespan > 0 else 0.0,
-        p50_ttft_s=_percentile([r["ttft"] for r in rows], 0.50),
-        p99_ttft_s=_percentile([r["ttft"] for r in rows], 0.99),
-        p50_latency_s=_percentile([r["latency"] for r in rows], 0.50),
-        p99_latency_s=_percentile([r["latency"] for r in rows], 0.99),
+        **_ttft_percentiles(rows),
     )
     return TrafficResult(events, rows, summary,
                          wall_s=_time.perf_counter() - t_wall)
@@ -260,6 +299,7 @@ def replay_seed_sync(spec: TrafficSpec, compute: ComputeModel,
             rid = g0 + j
             rows.append(dict(rid=rid, arrival=a.t, prompt_len=len(a.prompt),
                              max_new=a.max_new, ttft=first - a.t,
+                             queue_s=start - a.t, service_s=first - start,
                              latency=finish - a.t, finish=finish))
             total_tokens += a.max_new
         clock = finish
@@ -268,9 +308,6 @@ def replay_seed_sync(spec: TrafficSpec, compute: ComputeModel,
         total_tokens=float(total_tokens),
         makespan_s=clock,
         tok_per_sec=total_tokens / clock if clock > 0 else 0.0,
-        p50_ttft_s=_percentile([r["ttft"] for r in rows], 0.50),
-        p99_ttft_s=_percentile([r["ttft"] for r in rows], 0.99),
-        p50_latency_s=_percentile([r["latency"] for r in rows], 0.50),
-        p99_latency_s=_percentile([r["latency"] for r in rows], 0.99),
+        **_ttft_percentiles(rows),
     )
     return TrafficResult(events, rows, summary)
