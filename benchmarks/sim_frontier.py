@@ -2,8 +2,10 @@
 
 Sweeps tau, m, the FO codec (per-worker vs legacy wire accounting — the
 compress-mode axis showing the honest QSGD byte cost), straggler severity,
-the link topology (flat/ring/tree/gossip all-reduce, 1 vs 2 pods) and the
-async staleness bound; every configuration replays the REAL round programs
+the link topology (flat/ring/tree/gossip all-reduce, 1 vs 2 pods), the
+async staleness bound and — under ``--federated`` — K-of-N partial
+participation (``federated_axis``: sampled client cohorts with
+availability churn); every configuration replays the REAL round programs
 through the discrete-event cluster model and reports when (in simulated
 seconds) it reaches the target loss.  This is the paper's Table-1 tradeoff collapsed
 onto one axis — and the benchmark asserts the qualitative ordering on a
@@ -222,6 +224,122 @@ def overlap_axis(args, ds, params):
         raise SystemExit(f"overlap/contention acceptance violated: {bad}")
 
 
+def federated_axis(args, ds, params):
+    """Federated partial-participation frontier (the ISSUE-9 acceptance
+    criterion): HO-SGD with sampled-cohort rounds vs FedAvg-style
+    local-update averaging vs masked FedDropoutAvg, at client populations
+    N ∈ {256, 1024} and participation K/N ∈ {1%, 10%} with 90%
+    availability churn.
+
+    Every cell replays the real round programs over the seeded K-of-N
+    cohort schedule (``ClusterSpec.sampling``) on a bandwidth-starved
+    cluster and reports time-to-target-loss.  Acceptance:
+
+      * determinism — the N=1024, K/N=1% fed_ho_sgd cell, run twice from
+        scratch, produces a bit-identical event trace and loss history;
+      * ledger-booked cohort bytes — each fed_avg round's booked wire bytes
+        equal per-client model bytes × that round's LIVE cohort (the
+        sampled-and-up clients of the seeded schedule), never × N;
+      * every method reaches a finite loss (the frontier rows compare
+        t_to_target / bytes across the three methods).
+
+    Writes ``--federated-out`` (BENCH_sim_frontier_federated.json — rides
+    the CI artifact glob).
+    """
+    from repro.dist.collectives import _tree_nbytes
+
+    tau, local_steps, avail = 4, 4, 0.9
+    grid = ([(256, 0.10), (1024, 0.01)] if args.smoke
+            else [(256, 0.01), (256, 0.10), (1024, 0.01), (1024, 0.10)])
+    iters = args.federated_iters if not args.smoke \
+        else min(args.federated_iters, 40)
+    methods = ["fed_ho_sgd", "fed_avg", "fed_dropout_avg"]
+    rows, acceptance, results = [], {}, {}
+
+    def cell(N, K, method):
+        cl = ClusterSpec(m=K, flops_per_sec=args.flops, alpha=args.alpha,
+                         bandwidth=args.bandwidth, n_clients=N, cohort_k=K,
+                         availability=avail, seed=args.seed)
+        batch = K * 2 * local_steps
+        sm = make_sim_methods(mlp_loss, params, cl, tau=tau, lr=args.lr,
+                              zo_lr=args.zo_lr, seed=args.seed,
+                              local_steps=local_steps,
+                              which=[method])[method]
+        s = run_one(f"{method}[N={N},K={K}]", sm, params, ds, cl,
+                    iters=iters, batch=batch, target=args.target_loss,
+                    seed=args.seed)
+        return cl, sm, s
+
+    print("name,us_per_call," + ",".join(FIELDS))
+    for N, frac in grid:
+        K = max(2, int(round(N * frac)))
+        for method in methods:
+            cl, sm, s = cell(N, K, method)
+            s.update(n_clients=N, cohort_k=K, participation=frac,
+                     availability=avail, method=method)
+            rows.append(s)
+            results[(N, K, method)] = cl
+            print(f"sim/{s['config']},0,"
+                  + ",".join(fmt(s[k]) for k in FIELDS))
+            acceptance[f"finite_loss[{s['config']}]"] = \
+                math.isfinite(s["final_loss"])
+
+    # determinism pin: the N>=1024, 1%-participation fed_ho_sgd cell run
+    # twice from scratch must produce bit-identical traces
+    N_pin, K_pin = 1024, max(2, int(round(1024 * 0.01)))
+    cl = ClusterSpec(m=K_pin, flops_per_sec=args.flops, alpha=args.alpha,
+                     bandwidth=args.bandwidth, n_clients=N_pin,
+                     cohort_k=K_pin, availability=avail, seed=args.seed)
+    batch = K_pin * 2 * local_steps
+    compute = compute_model_for(params, cl, batch // cl.m)
+
+    def run_once(method):
+        sm = make_sim_methods(mlp_loss, params, cl, tau=tau, lr=args.lr,
+                              zo_lr=args.zo_lr, seed=args.seed,
+                              local_steps=local_steps,
+                              which=[method])[method]
+        return simulate(sm, params, batches(ds, batch, seed=args.seed), cl,
+                        iters, compute=compute)
+
+    r1, r2 = run_once("fed_ho_sgd"), run_once("fed_ho_sgd")
+    acceptance["determinism_bit_identical_trace[N=1024,K/N=1%]"] = (
+        r1.trace == r2.trace and r1.losses == r2.losses
+        and r1.comm_bytes == r2.comm_bytes)
+
+    # ledger pin: each fed_avg round's booked bytes = per-client model
+    # bytes x that round's LIVE cohort from the seeded schedule (never x N)
+    ra = run_once("fed_avg")
+    per_client = _tree_nbytes(params)
+    fed = cl.sampling
+    ok = all(
+        ra.comm_bytes[t] == per_client * len(fed.cohort_for(t))
+        and ra.active_counts[t] == len(fed.cohort_for(t))
+        for t in range(len(ra.comm_bytes)))
+    acceptance["cohort_bytes_ledger_booked[fed_avg]"] = ok
+
+    for k, v in acceptance.items():
+        print(f"sim/federated_acceptance[{k}],0,{int(bool(v))}")
+
+    if args.federated_out:
+        out_dir = os.path.dirname(args.federated_out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(args.federated_out, "w") as f:
+            json.dump({
+                "bench": "sim_frontier_federated",
+                "config": dict(grid=grid, iters=iters, tau=tau,
+                               local_steps=local_steps, availability=avail,
+                               target=args.target_loss, seed=args.seed),
+                "acceptance": {k: bool(v) for k, v in acceptance.items()},
+                "rows": rows,
+            }, f, indent=1)
+        print(f"# wrote {args.federated_out}")
+
+    bad = [k for k, ok in acceptance.items() if not ok]
+    if bad:
+        raise SystemExit(f"federated acceptance violated: {bad}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="CI-sized sweep")
@@ -262,6 +380,19 @@ def main(argv=None):
     ap.add_argument("--overlap-out",
                     default=os.path.join(REPO_ROOT,
                                          "BENCH_sim_frontier_overlap.json"))
+    # federated partial-participation axis
+    ap.add_argument("--federated", action="store_true",
+                    help="run just the federated K-of-N partial-"
+                         "participation axis (CI step): fed_ho_sgd vs "
+                         "fed_avg vs fed_dropout_avg at N in {256,1024}, "
+                         "K/N in {1%%,10%%}, with determinism and "
+                         "cohort-byte acceptance pins")
+    ap.add_argument("--federated-iters", type=int, default=160,
+                    help="iterations per federated-axis cell (smoke caps "
+                         "at 40)")
+    ap.add_argument("--federated-out",
+                    default=os.path.join(
+                        REPO_ROOT, "BENCH_sim_frontier_federated.json"))
     ap.add_argument("--trace-report", action="store_true",
                     help="export the bucketed overlap cells as Perfetto "
                          "traces and re-derive the exposed-comm headline "
@@ -282,6 +413,9 @@ def main(argv=None):
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
                                  ds.n_classes, hidden=args.hidden)
+    if args.federated:
+        federated_axis(args, ds, params)
+        return
     if args.overlap_only:
         overlap_axis(args, ds, params)
         return

@@ -24,5 +24,11 @@ from repro.core.rounds import (  # noqa: F401
     RoundStep,
     Wire,
     ho_sgd_program,
+    masked_average,
     to_method,
+)
+from repro.core.federated import (  # noqa: F401
+    ClientSampling,
+    cohort_shards,
+    fed_avg_program,
 )

@@ -1,0 +1,223 @@
+"""Federated partial participation for the round IR (README §RoundProgram).
+
+The simulator tops out at tens of always-on workers; federated regimes are
+N ≫ m client populations where each round samples a small cohort.  This
+module adds exactly the missing piece — *who participates* — on top of the
+existing ``repro.core.rounds`` machinery:
+
+  * ``ClientSampling(n_clients, cohort_k, seed, availability)`` is a frozen
+    spec attached to a ``RoundProgram``.  Every round draws a seeded cohort
+    of K of N client ids without replacement, then applies per-client
+    availability churn (a seeded Bernoulli dropout mask over the drawn
+    cohort, at least one survivor).  Same spec + same ``t`` ⇒ the same
+    cohort, bit for bit — the sim's determinism contract extends to
+    membership.
+  * Each sampled client computes its round ``local`` on its OWN data shard:
+    ``cohort_shards`` draws client c's rows from the global batch with an
+    rng keyed on the client's IDENTITY (and ``t``), never its position in
+    the cohort — a client's data stream is invariant to who else was
+    sampled, matching how ``Wire``/ZO-direction streams are keyed.
+  * ``fed_avg_program`` builds the two averaging baselines of the federated
+    frontier as ordinary round programs committing through the
+    ``masked_average`` collective (``rounds.masked_average``): FedAvg-style
+    local-update averaging (``dropout=0``) and FedDropoutAvg-style masked
+    averaging (each client zeroes a seeded fraction of its payload; the
+    server averages per coordinate over the clients that actually sent it,
+    weighted by nonzero-mask × client dataset size).
+
+HO-SGD itself goes federated by passing ``client_sampling=`` to
+``rounds.ho_sgd_program``: the cohort's FO gradients all-reduce, the
+cohort's ZO coefficients all-gather, and the pre-shared direction streams
+survive sampling because they were always keyed on worker IDENTITY.
+
+Wire accounting: a ``masked_average`` round books per-client payload bytes
+× |live cohort| — what the sampled clients actually upload, never × N —
+through the one wire model in ``rounds.wire_nbytes``; codecs (qsgd/topk)
+compose per client.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rounds as R
+
+#: namespace salt so federated draws never collide with other np seed uses
+_FED_SALT = 0x0FED
+
+
+@dataclass(frozen=True)
+class ClientSampling:
+    """K-of-N partial participation: the seeded cohort schedule.
+
+    ``cohort_for(t)`` draws the round-``t`` cohort: ``cohort_k`` of
+    ``n_clients`` ids without replacement, then an independent
+    per-client availability draw (probability ``availability`` of showing
+    up; at least one survivor — an all-down round re-admits a seeded pick).
+    Ids come back sorted ascending, matching the runner's membership
+    convention.
+
+    ``client_sizes()`` is the per-client dataset-size vector (seeded
+    lognormal counts ≥ 1, fixed per spec) — the masked-average weights.
+    """
+
+    n_clients: int
+    cohort_k: int
+    seed: int = 0
+    availability: float = 1.0
+
+    def __post_init__(self):
+        assert self.n_clients >= 1
+        assert 1 <= self.cohort_k <= self.n_clients, \
+            f"cohort_k={self.cohort_k} not in [1, n_clients={self.n_clients}]"
+        assert 0.0 < self.availability <= 1.0, \
+            f"availability must be in (0, 1], got {self.availability}"
+
+    def _rng(self, *salt: int) -> np.random.Generator:
+        return np.random.default_rng([_FED_SALT, self.seed, *salt])
+
+    def cohort_for(self, t: int) -> Tuple[int, ...]:
+        """Sorted client ids participating in round ``t`` (live cohort)."""
+        rng = self._rng(1, int(t))
+        ids = rng.choice(self.n_clients, size=self.cohort_k, replace=False)
+        if self.availability < 1.0:
+            up = rng.random(self.cohort_k) < self.availability
+            if not up.any():
+                up[int(rng.integers(self.cohort_k))] = True
+            ids = ids[up]
+        return tuple(int(i) for i in np.sort(ids))
+
+    def client_sizes(self) -> np.ndarray:
+        """(n_clients,) int64 dataset sizes — seeded once per spec."""
+        rng = self._rng(2)
+        raw = rng.lognormal(mean=4.0, sigma=0.75, size=self.n_clients)
+        return np.maximum(1, np.round(raw)).astype(np.int64)
+
+    def client_weights(self, cohort: Sequence[int]) -> np.ndarray:
+        """Masked-average weights of a cohort: each client's dataset size."""
+        sizes = self.client_sizes()
+        return sizes[np.asarray(list(cohort), dtype=np.int64)].astype(
+            np.float64)
+
+
+def cohort_shards(batch: Any, cohort: Sequence[int], t: int,
+                  cs: ClientSampling) -> Any:
+    """Stack each sampled client's OWN shard of the global batch.
+
+    Client c's rows are drawn by an rng keyed on (spec seed, c, t) — the
+    client's identity, so its data stream is invariant to who else was
+    sampled (and to availability churn).  Every client gets
+    ``n_rows // cohort_k`` rows (the same per-worker batch the always-on
+    replay would shard), stacked on a new leading cohort axis.
+    """
+    leaves = jax.tree.leaves(batch)
+    n = int(leaves[0].shape[0])
+    per = n // cs.cohort_k
+    assert per >= 1, f"batch of {n} rows cannot feed cohorts of {cs.cohort_k}"
+    rows = np.stack([
+        np.random.default_rng([_FED_SALT, cs.seed, 3, int(c), int(t)])
+        .choice(n, size=per, replace=False)
+        for c in cohort])
+    return jax.tree.map(lambda x: x[rows], batch)
+
+
+# --------------------------------------------------------------------------- #
+# FedAvg / FedDropoutAvg as round programs
+# --------------------------------------------------------------------------- #
+def fed_avg_round(loss_fn: Callable, *, lr: float, local_steps: int,
+                  dropout: float = 0.0, seed: int = 0,
+                  wire: Optional[R.Wire] = None, tag: str = "fed_avg",
+                  ) -> R.Round:
+    """One communication round of FedAvg / FedDropoutAvg.
+
+    ``local``: each client runs ``local_steps`` SGD steps over equal
+    micro-slices of its shard and uploads the resulting model tree.  With
+    ``dropout > 0`` (FedDropoutAvg) the client zeroes a seeded fraction of
+    every uploaded leaf — keys folded on (t, client id), so a client's
+    dropout mask is invariant to the rest of the cohort.
+
+    ``apply``: the ``masked_average`` collective hands over ``(avg, wsum)``;
+    coordinates no surviving client sent (``wsum == 0``) keep the server's
+    old value.
+    """
+    wire = wire or R.Wire()
+    drop = float(dropout)
+    assert 0.0 <= drop < 1.0, f"dropout must be in [0, 1), got {drop}"
+
+    def local(t, worker, model, shard):
+        n = jax.tree.leaves(shard)[0].shape[0]
+        assert n % local_steps == 0, \
+            f"client shard of {n} rows cannot split into {local_steps} steps"
+        micro = jax.tree.map(
+            lambda x: x.reshape((local_steps, n // local_steps)
+                                + x.shape[1:]), shard)
+
+        def body(p, mb):
+            loss, g = jax.value_and_grad(loss_fn)(p, mb)
+            p = jax.tree.map(
+                lambda a, b: (a.astype(jnp.float32)
+                              - lr * b.astype(jnp.float32)).astype(a.dtype),
+                p, g)
+            return p, loss
+
+        out, losses = jax.lax.scan(body, model, micro)
+        if drop > 0.0:
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.key(seed), t), worker)
+            leaves, treedef = jax.tree.flatten(out)
+            keys = jax.random.split(key, len(leaves))
+            leaves = [jnp.where(jax.random.bernoulli(k, 1.0 - drop, x.shape),
+                                x, jnp.zeros_like(x))
+                      for k, x in zip(keys, leaves)]
+            out = jax.tree.unflatten(treedef, leaves)
+        return out, jnp.mean(losses)
+
+    @jax.jit
+    def _apply_j(params, avg, wsum, f_mean):
+        params = jax.tree.map(
+            lambda p, a, s: jnp.where(s > 0, a.astype(p.dtype), p),
+            params, avg, wsum)
+        return params, f_mean
+
+    def apply(t, params, state, reduced, workers, aux):
+        avg, wsum = reduced
+        params, loss = _apply_j(params, avg, wsum, jnp.mean(aux))
+        return params, state, {"loss": loss}
+
+    return R.Round(tag, 1, "masked_average", local, apply, wire=wire,
+                   meta={"loss_fn": loss_fn, "lr": lr,
+                         "local_steps": local_steps, "dropout": drop})
+
+
+def fed_avg_program(loss_fn: Callable, sampling: ClientSampling, *,
+                    lr: float, local_steps: int = 4, dropout: float = 0.0,
+                    seed: int = 0, wire: Optional[R.Wire] = None,
+                    name: str = "fed_avg") -> R.RoundProgram:
+    """FedAvg (``dropout=0``) / FedDropoutAvg as a ``RoundProgram``.
+
+    Every round is the same ``masked_average`` round over a freshly sampled
+    cohort (``sampling``); ``m = cohort_k`` — the program's worker slots ARE
+    the cohort.  Analytic Table-1 hooks: each round uploads |cohort| model
+    trees (``comm_scalars``) and costs ``local_steps`` gradient evals per
+    client.
+    """
+    rnd = fed_avg_round(loss_fn, lr=lr, local_steps=local_steps,
+                        dropout=dropout, seed=seed, wire=wire, tag=name)
+
+    def init(params):
+        return {}
+
+    def round_for(t: int, state) -> R.RoundStep:
+        return R.RoundStep(rnd, t, {})
+
+    return R.RoundProgram(
+        name, sampling.cohort_k, init, round_for,
+        comm_scalars=lambda d: float(sampling.cohort_k) * d,
+        fevals=lambda d: 0.0,
+        gevals=lambda d: float(local_steps),
+        client_sampling=sampling,
+    )

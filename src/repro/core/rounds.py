@@ -15,8 +15,10 @@ is now written ONCE as a ``RoundProgram``:
   * each ``Round`` is a per-worker ``local(t, worker, model, shard) ->
     (payload, aux)`` plus a collective op — ``all_reduce`` (mean of
     payloads), ``all_gather`` (stacked payloads), ``tree_average`` (model
-    tree averaging), ``neighbor_exchange`` (ring-gossip mixing) or ``none``
-    — with an explicit wire codec hook (``Wire``);
+    tree averaging), ``masked_average`` (per-coordinate weighted average
+    over the workers that sent a nonzero value — the federated
+    FedDropoutAvg commit), ``neighbor_exchange`` (ring-gossip mixing) or
+    ``none`` — with an explicit wire codec hook (``Wire``);
   * ``apply(t, params, state, reduced, workers, aux)`` commits the reduced
     payload into the global ``(params, state)``.
 
@@ -42,13 +44,29 @@ received per worker per collective):
     W); with a per-worker codec: ``codec.nbytes`` × n_active (each worker
     receives every active worker's code — QSGD's real protocol); with the
     legacy post-reduction codec: ``codec.nbytes`` × 1;
-  * ``tree_average`` — bytes of the averaged model tree;
+  * ``tree_average`` — dense: bytes of the averaged model tree; with a
+    per-worker codec: ``codec.nbytes`` × n_active (the reducer receives
+    every active worker's encoded tree); legacy: ``codec.nbytes`` × 1;
+  * ``masked_average`` — per-client payload bytes (codec bytes when a
+    codec rides the wire, dense otherwise) × n_active: exactly what the
+    live sampled cohort uploads, never × the client population N;
   * ``neighbor_exchange`` — min(2, W-1) neighbor payloads per worker;
   * ``none`` — 0.
+
+A ``Wire`` codec only composes with the collectives that actually move an
+encodable payload — see ``CODEC_COLLECTIVES``; ``Round.__post_init__``
+fails fast on any other (collective, codec) pairing instead of silently
+booking dense bytes.
 
 The executor both returns the byte count (``metrics["comm_bytes"]``) and
 books it through ``repro.dist.collectives.note`` so a ledger-wrapped replay
 records the identical number — the wire model lives in exactly one place.
+
+Federated partial participation (``core.federated``): a ``RoundProgram``
+with a ``client_sampling`` spec runs each round over a freshly sampled
+K-of-N client cohort — the executor draws the cohort, feeds every sampled
+client its own data shard (``federated.cohort_shards``), and weighs the
+``masked_average`` commit by client dataset size.
 """
 from __future__ import annotations
 
@@ -64,8 +82,16 @@ from repro.dist.collectives import _tree_nbytes
 from repro.dist.compress import Compressor, compress_tree
 
 #: collective ops a Round may request (the executor's reduce semantics)
-COLLECTIVES = ("all_reduce", "all_gather", "tree_average",
+COLLECTIVES = ("all_reduce", "all_gather", "tree_average", "masked_average",
                "neighbor_exchange", "none")
+
+#: the (collective, codec) support matrix: collectives a ``Wire`` codec
+#: composes with — both booked by ``wire_nbytes`` and round-tripped by
+#: ``reduce_payloads``.  ``all_gather`` moves raw (typically scalar)
+#: payloads and ``none`` moves nothing; a codec there would silently book
+#: dense bytes, so ``Round.__post_init__`` rejects it.
+CODEC_COLLECTIVES = ("all_reduce", "tree_average", "masked_average",
+                     "neighbor_exchange")
 
 #: wire codec application modes
 WIRE_MODES = ("per_worker", "legacy")
@@ -131,9 +157,16 @@ class Overlap:
         return (self.buckets - 1) / self.buckets
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class Round:
     """One per-worker round: local computation + collective + apply.
+
+    ``eq=False`` keeps object identity for ``__eq__``/``__hash__``: rounds
+    are compared and cached (``RoundExecutor``'s jit caches) by the object
+    itself, which both matches the semantics (two rounds with identical
+    fields still close over distinct jitted ``local``s) and pins a strong
+    reference in the cache — a dynamically built round can never alias a
+    dead round's cache entry the way the historical ``id(rnd)`` keys could.
 
     ``local(t, worker, model, shard) -> (payload, aux)`` runs on each
     participating worker; ``model`` is the worker's model view — the global
@@ -168,6 +201,18 @@ class Round:
     def __post_init__(self):
         assert self.collective in COLLECTIVES, \
             f"unknown collective {self.collective!r}; have {COLLECTIVES}"
+        if self.wire.codec is not None:
+            assert self.collective in CODEC_COLLECTIVES, (
+                f"a Wire codec ({self.wire.codec.name!r}) is not supported "
+                f"on collective {self.collective!r}: codecs compose with "
+                f"{CODEC_COLLECTIVES} (all_gather moves raw payloads, "
+                f"'none' moves nothing — dense booking would silently "
+                f"misreport compression)")
+        if self.collective == "masked_average":
+            assert self.wire.mode == "per_worker", (
+                "masked_average is inherently per-client: each sampled "
+                "client uploads its own (possibly masked) payload; the "
+                "legacy post-reduction wire mode has no meaning here")
 
 
 class RoundStep(NamedTuple):
@@ -192,6 +237,12 @@ class RoundProgram:
     key)`` optionally transforms the global batch before sharding (RI-SGD's
     redundancy mixing).  ``comm_scalars``/``fevals``/``gevals`` are the
     Table-1 analytic per-iteration cost hooks (``Method`` compatibility).
+
+    ``client_sampling`` (a ``core.federated.ClientSampling``, default None)
+    makes the program federated: ``m`` must equal the spec's ``cohort_k``
+    (the worker slots ARE the sampled cohort), and the executor draws each
+    round's live cohort from the spec instead of assuming workers 0..m-1,
+    feeding every sampled client its own identity-keyed data shard.
     """
 
     name: str
@@ -202,6 +253,14 @@ class RoundProgram:
     fevals: Callable[[int], float]
     gevals: Callable[[int], float]
     prepare: Optional[Callable[[int, Any, Any], Any]] = None
+    client_sampling: Any = None
+
+    def __post_init__(self):
+        if self.client_sampling is not None:
+            assert self.client_sampling.cohort_k == self.m, (
+                f"federated program {self.name!r}: m={self.m} must equal "
+                f"cohort_k={self.client_sampling.cohort_k} — the worker "
+                f"slots are the sampled cohort")
 
 
 # --------------------------------------------------------------------------- #
@@ -247,7 +306,15 @@ def wire_nbytes(rnd: Round, payload_slice: Any, n_active: int) -> int:
         per = codec_nbytes(codec, payload_slice)
         return per * (n_active if rnd.wire.mode == "per_worker" else 1)
     if rnd.collective == "tree_average":
-        return dense
+        if codec is None:
+            return dense
+        per = codec_nbytes(codec, payload_slice)
+        return per * (n_active if rnd.wire.mode == "per_worker" else 1)
+    if rnd.collective == "masked_average":
+        # the sampled cohort's uploads: per-client payload × |live cohort|,
+        # NEVER × the client population N
+        per = dense if codec is None else codec_nbytes(codec, payload_slice)
+        return per * n_active
     if rnd.collective == "neighbor_exchange":
         k = min(2, n_active - 1)
         per = dense if codec is None else codec_nbytes(codec, payload_slice)
@@ -276,6 +343,36 @@ def neighbor_mix(stacked: Any, n_active: int) -> Any:
     return jax.tree.map(mix, stacked)
 
 
+def masked_average(stacked: Any, weights) -> Tuple[Any, Any]:
+    """FedDropoutAvg's masked weighted average over a worker-stacked tree.
+
+    Per coordinate: ``avg = Σ_c w_c·x_c / Σ_c w_c·1[x_c ≠ 0]`` — each
+    client's weight (``weights[c]``, typically its dataset size) counts
+    only toward the coordinates it actually sent; a zero value is an
+    absent value (FedDropoutAvg's sub-model semantics).  Returns
+    ``(avg, wsum)`` trees: ``wsum`` is the per-coordinate surviving weight
+    mass so ``apply`` can keep the server value where nobody contributed
+    (``wsum == 0`` ⇒ ``avg == 0`` there).  fp32 accumulation, cast back.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+
+    def num_den(x):
+        x32 = x.astype(jnp.float32)
+        wb = w.reshape((w.shape[0],) + (1,) * (x32.ndim - 1))
+        num = jnp.sum(x32 * wb, axis=0)
+        den = jnp.sum(jnp.where(x32 != 0, wb, 0.0), axis=0)
+        return num, den
+
+    def avg_leaf(x):
+        num, den = num_den(x)
+        out = jnp.where(den > 0, num / jnp.where(den > 0, den, 1.0), 0.0)
+        return out.astype(x.dtype)
+
+    avg = jax.tree.map(avg_leaf, stacked)
+    wsum = jax.tree.map(lambda x: num_den(x)[1], stacked)
+    return avg, wsum
+
+
 def _wire_key(wire: Wire, key, t) -> jax.Array:
     base = key if key is not None else jax.random.key(wire.seed)
     return jax.random.fold_in(base, t)
@@ -301,15 +398,24 @@ def wire_roundtrip(wire: Wire, stacked: Any, workers: Sequence[int],
 
 
 def reduce_payloads(rnd: Round, stacked: Any, workers: Sequence[int],
-                    key_t) -> Any:
+                    key_t, weights=None) -> Any:
     """Apply the wire codec and the round's collective to a worker-stacked
-    payload tree; returns what ``apply`` receives as ``reduced``."""
+    payload tree; returns what ``apply`` receives as ``reduced``.
+
+    ``weights`` (len(workers), default uniform) only matters for
+    ``masked_average`` — the per-client weight of the masked weighted
+    average (client dataset sizes under ``ClientSampling``)."""
     n_active = len(workers)
     if rnd.collective in ("none", "all_gather"):
         return stacked
     if rnd.collective == "neighbor_exchange":
         stacked = wire_roundtrip(rnd.wire, stacked, workers, key_t)
         return neighbor_mix(stacked, n_active)
+    if rnd.collective == "masked_average":
+        stacked = wire_roundtrip(rnd.wire, stacked, workers, key_t)
+        if weights is None:
+            weights = jnp.ones((n_active,), jnp.float32)
+        return masked_average(stacked, weights)
     # all_reduce / tree_average: mean over the contributing workers
     stacked = wire_roundtrip(rnd.wire, stacked, workers, key_t)
     mean = jax.tree.map(
@@ -343,11 +449,14 @@ class RoundExecutor:
         self.prog = prog
         self._vmapped: Dict[Any, Callable] = {}
         self._single: Dict[Any, Callable] = {}
-        self._reduce: Dict[Any, Callable] = {}
 
     # -- cached jitted pieces ------------------------------------------------ #
+    # keyed by the Round OBJECT (identity hash, and a strong reference): the
+    # historical ``id(rnd)`` keys let a dynamically built round alias a dead
+    # round's id and silently run the wrong jitted local
+    # (tests/test_rounds_equivalence.py pins the regression)
     def _vmapped_local(self, rnd: Round, replica_axis: Optional[int]):
-        key = (id(rnd), replica_axis)
+        key = (rnd, replica_axis)
         fn = self._vmapped.get(key)
         if fn is None:
             fn = jax.jit(jax.vmap(rnd.local,
@@ -356,10 +465,10 @@ class RoundExecutor:
         return fn
 
     def _single_local(self, rnd: Round):
-        fn = self._single.get(id(rnd))
+        fn = self._single.get(rnd)
         if fn is None:
             fn = jax.jit(rnd.local)
-            self._single[id(rnd)] = fn
+            self._single[rnd] = fn
         return fn
 
     # -- one round ----------------------------------------------------------- #
@@ -372,32 +481,54 @@ class RoundExecutor:
         rnd, t_step = step.round, step.t_step
         if prog.prepare is not None:
             batch = prog.prepare(t, batch, key)
-        shards = split_shards(batch, prog.m)
-        ws = list(range(prog.m)) if workers is None else list(workers)
-        assert ws, "a round needs at least one participating worker"
-        idx = jnp.asarray(ws, jnp.int32)
-        w_arr = jnp.asarray(ws, jnp.uint32)
-        shards_sel = _slice_tree(shards, idx)
         tj = jnp.int32(t_step)
+        cs = prog.client_sampling
+        weights = None
 
-        if rnd.replica:
-            models = _slice_tree(state["replicas"], idx)
-            payloads, aux = self._vmapped_local(rnd, 0)(
-                tj, w_arr, models, shards_sel)
-        elif views is None:
+        if cs is not None:
+            # federated replay: the live cohort (sampled here unless the
+            # caller already drew it), each client on its own identity-keyed
+            # shard; the masked-average weights are the client dataset sizes
+            from repro.core.federated import cohort_shards
+            assert not rnd.replica, \
+                "client-sampling rounds keep one server model, not replicas"
+            assert views is None, \
+                "client-sampling rounds are server-synchronous (no views)"
+            ws = list(cs.cohort_for(t)) if workers is None else list(workers)
+            assert ws, "a round needs at least one participating worker"
+            w_arr = jnp.asarray(ws, jnp.uint32)
+            shards_sel = cohort_shards(batch, ws, t, cs)
             payloads, aux = self._vmapped_local(rnd, None)(
                 tj, w_arr, params, shards_sel)
+            if rnd.collective == "masked_average":
+                weights = cs.client_weights(ws)
         else:
-            single = self._single_local(rnd)
-            outs = [single(tj, jnp.uint32(w), views.get(w, params),
-                           _slice_tree(shards, w)) for w in ws]
-            payloads = _stack_trees([p for p, _ in outs])
-            aux = jnp.stack([a for _, a in outs])
+            shards = split_shards(batch, prog.m)
+            ws = list(range(prog.m)) if workers is None else list(workers)
+            assert ws, "a round needs at least one participating worker"
+            idx = jnp.asarray(ws, jnp.int32)
+            w_arr = jnp.asarray(ws, jnp.uint32)
+            shards_sel = _slice_tree(shards, idx)
+
+            if rnd.replica:
+                models = _slice_tree(state["replicas"], idx)
+                payloads, aux = self._vmapped_local(rnd, 0)(
+                    tj, w_arr, models, shards_sel)
+            elif views is None:
+                payloads, aux = self._vmapped_local(rnd, None)(
+                    tj, w_arr, params, shards_sel)
+            else:
+                single = self._single_local(rnd)
+                outs = [single(tj, jnp.uint32(w), views.get(w, params),
+                               _slice_tree(shards, w)) for w in ws]
+                payloads = _stack_trees([p for p, _ in outs])
+                aux = jnp.stack([a for _, a in outs])
 
         one = _slice_tree(payloads, 0)
         nbytes = wire_nbytes(rnd, one, len(ws))
         reduced = reduce_payloads(rnd, payloads, ws,
-                                  _wire_key(rnd.wire, key, t_step))
+                                  _wire_key(rnd.wire, key, t_step),
+                                  weights=weights)
         if nbytes:
             coll.note(rnd.collective, None, nbytes=nbytes, tag=rnd.tag)
         if aux is not None:
@@ -411,6 +542,7 @@ class RoundExecutor:
         metrics = dict(metrics)
         metrics.setdefault("order", rnd.order)
         metrics["comm_bytes"] = nbytes
+        metrics["n_live"] = len(ws)
         return params, state, metrics
 
 
@@ -505,13 +637,21 @@ def ho_sgd_program(
     tau_schedule: Optional[Callable[[int], int]] = None,
     zo_only: bool = False,
     overlap: Optional[Overlap] = None,
+    client_sampling: Any = None,
 ) -> RoundProgram:
     """HO-SGD (Algorithm 1) as a round program: FO sync rounds every tau
     iterations (or per ``tau_schedule`` through the shared
     ``adaptive_tau_decision``), ZO rounds in between; ``zo_only`` never
     syncs (distributed ZO-SGD).  State is ``{"opt": ..., "since_fo": int}``
     — the same layout the simulator checkpoints.  ``overlap`` buckets both
-    round kinds' collectives (time only, never bytes)."""
+    round kinds' collectives (time only, never bytes).
+
+    ``client_sampling`` (``core.federated.ClientSampling``, cohort_k must
+    equal ``ho.m``) makes the program federated: every round runs over a
+    freshly sampled client cohort on identity-keyed shards.  The ZO
+    direction streams survive sampling unchanged — they were always keyed
+    on worker IDENTITY, so client 812's direction at round t does not
+    depend on who else was sampled."""
     from repro.core.ho_sgd import adaptive_tau_decision
     from repro.opt.optimizers import const_schedule, sgd
 
@@ -539,4 +679,5 @@ def ho_sgd_program(
         comm_scalars=lambda d: (d + (tau - 1)) / tau,
         fevals=lambda d: 2.0 * (tau - 1) / tau,
         gevals=lambda d: 1.0 / tau,
+        client_sampling=client_sampling,
     )

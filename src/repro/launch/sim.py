@@ -7,6 +7,13 @@ with 10% stragglers:
     PYTHONPATH=src python -m repro.launch.sim --dataset acoustic \
         --methods ho_sgd sync_sgd --iters 400 --tau 8 \
         --bandwidth 1e5 --straggler-prob 0.1 --target-loss 0.9
+
+Federated partial participation — 1024 clients, cohorts of 10 per round
+with 90% availability, HO-SGD vs the FedAvg-family baselines:
+
+    PYTHONPATH=src python -m repro.launch.sim --federated 1024:10 \
+        --availability 0.9 --methods fed_ho_sgd fed_avg fed_dropout_avg \
+        --batch 80 --iters 200 --tau 4
 """
 from __future__ import annotations
 
@@ -30,7 +37,8 @@ from repro.sim import (
 )
 
 METHODS = ["ho_sgd", "ho_sgd_adaptive", "sync_sgd", "zo_sgd", "pa_sgd",
-           "pa_gossip", "ri_sgd", "qsgd"]
+           "pa_gossip", "ri_sgd", "qsgd", "fed_ho_sgd", "fed_avg",
+           "fed_dropout_avg"]
 
 
 def main(argv=None):
@@ -63,6 +71,21 @@ def main(argv=None):
                          "and each worker's actual params view; monolithic "
                          "keeps the PR-4 pricing-only replay")
     ap.add_argument("--seed", type=int, default=0)
+    # federated partial participation
+    ap.add_argument("--federated", default=None, metavar="N:K",
+                    help="client-sampling rounds: N total clients, seeded "
+                         "cohorts of K per round (sets n_clients/cohort_k "
+                         "and overrides --m with K); use with the fed_* "
+                         "methods")
+    ap.add_argument("--availability", type=float, default=1.0,
+                    help="per-round probability a sampled client shows up "
+                         "(federated churn; at least one survivor)")
+    ap.add_argument("--local-steps", type=int, default=None,
+                    help="fed_avg/fed_dropout_avg local SGD steps per round "
+                         "(default: --tau)")
+    ap.add_argument("--fed-dropout", type=float, default=0.25,
+                    help="fed_dropout_avg: fraction of each client upload "
+                         "zeroed (masked out) per round")
     # cluster
     ap.add_argument("--m", type=int, default=4)
     ap.add_argument("--flops", type=float, default=1e9,
@@ -119,6 +142,13 @@ def main(argv=None):
                          "OUT.METHOD.json) and print its attribution")
     args = ap.parse_args(argv)
 
+    n_clients = cohort_k = 0
+    if args.federated:
+        n_str, _, k_str = args.federated.partition(":")
+        n_clients, cohort_k = int(n_str), int(k_str)
+        assert cohort_k >= 1, "--federated N:K needs K >= 1"
+        args.m = cohort_k    # the sim's worker slots hold the cohort
+
     topo = (Topology(pods=args.pods, inter_alpha=args.inter_alpha,
                      inter_bandwidth=args.inter_bandwidth)
             if args.pods > 1 else None)
@@ -130,7 +160,8 @@ def main(argv=None):
         fail_rate=args.fail_rate, elastic=args.elastic,
         downtime=args.downtime, restart_time=args.restart_time,
         ckpt_every=args.ckpt_every, contention=not args.no_contention,
-        seed=args.seed)
+        n_clients=n_clients, cohort_k=cohort_k,
+        availability=args.availability, seed=args.seed)
 
     ds = make_classification(args.dataset, seed=args.seed)
     params = init_mlp_classifier(jax.random.key(args.seed), ds.n_features,
@@ -147,7 +178,8 @@ def main(argv=None):
         mlp_loss, params, cluster, tau=args.tau, lr=args.lr, zo_lr=args.zo_lr,
         mu=args.mu, seed=args.seed, codec=get_compressor(args.compress),
         compress_mode=args.compress_mode, tau_schedule=sched,
-        which=args.methods, overlap_buckets=args.overlap_buckets)
+        which=args.methods, overlap_buckets=args.overlap_buckets,
+        local_steps=args.local_steps, fed_dropout=args.fed_dropout)
 
     print(f"sim: dataset={args.dataset} d={d:,} m={cluster.m} "
           f"bandwidth={cluster.bandwidth:.3g}B/s alpha={cluster.alpha:.3g}s "
@@ -156,7 +188,10 @@ def main(argv=None):
           f"staleness={cluster.max_staleness} elastic={cluster.elastic} "
           f"replay={args.replay} compress_mode={args.compress_mode} "
           f"overlap_buckets={args.overlap_buckets} "
-          f"contention={cluster.contention}")
+          f"contention={cluster.contention}"
+          + (f" federated={cluster.n_clients}:{cluster.cohort_k} "
+             f"availability={cluster.availability}"
+             if cluster.n_clients else ""))
     summaries = {}
     with CSVLogger(args.log, ["method", "iter", "order", "loss", "t_sim",
                               "comm_bytes"]) as logger:

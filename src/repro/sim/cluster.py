@@ -43,9 +43,11 @@ class Topology:
                          beta=1.0 / self.inter_bandwidth)
 
     def workers_per_pod(self, m: int) -> int:
-        assert m % self.pods == 0, \
-            f"m={m} does not divide into {self.pods} pods"
-        return m // self.pods
+        """Workers in the fullest pod — a CEIL split, priced exactly like
+        ``CollectiveModel.time_components``: sampled federated cohorts and
+        shrunken elastic memberships are not pod-divisible, and the fullest
+        pod bounds the hierarchical reduce's intra-pod stage."""
+        return max(1, math.ceil(m / self.pods))
 
 
 @dataclass(frozen=True)
@@ -76,6 +78,14 @@ class ClusterSpec:
     WITHOUT the barrier, each at most ``s`` rounds ahead of the slowest
     worker's committed round; FO sync rounds always barrier, matching
     HO-SGD's semantics (the tau-th exchange is the consistency point).
+
+    Federated (``n_clients > 0``): the cluster's ``m`` worker slots hold a
+    sampled cohort of ``cohort_k`` (= m) of ``n_clients`` clients, redrawn
+    every round from the ``sampling`` spec (seeded by the cluster seed) with
+    per-client ``availability`` churn; the runner prices each round's
+    collective at the LIVE cohort size and the trajectory genuinely follows
+    the sample.  Federated rounds are server-synchronous — ``max_staleness``
+    and ``elastic`` must stay off (churn is the availability mask).
 
     Links: ``collective`` picks the all-reduce algorithm (``flat`` —
     PR 3's switched exchange — ``ring`` or ``tree``); a ``topology`` with
@@ -108,6 +118,9 @@ class ClusterSpec:
     restart_time: float = 30.0           # checkpoint-restore charge (s)
     ckpt_every: int = 0                  # iterations between sim checkpoints
     contention: bool = True              # shared links for async exchanges
+    n_clients: int = 0                   # >0: federated client population N
+    cohort_k: int = 0                    # sampled clients per round (= m)
+    availability: float = 1.0            # per-round client up-probability
     seed: int = 0
 
     def __post_init__(self):
@@ -117,8 +130,6 @@ class ClusterSpec:
             f"unknown collective {self.collective!r}; have {COLLECTIVE_KINDS}"
         assert self.max_staleness >= 0
         assert self.downtime > 0
-        if self.topology is not None:
-            self.topology.workers_per_pod(self.m)   # divisibility guard
         if self.rel_speeds:
             assert len(self.rel_speeds) == self.m, \
                 f"{len(self.rel_speeds)} rel_speeds for m={self.m}"
@@ -128,6 +139,22 @@ class ClusterSpec:
         if self.fail_rate > 0 and not self.elastic:
             assert self.ckpt_every > 0, \
                 "failure injection needs ckpt_every > 0 (restore source)"
+        assert 0.0 < self.availability <= 1.0, \
+            f"availability must be in (0, 1], got {self.availability}"
+        if self.n_clients > 0:
+            assert 1 <= self.cohort_k <= self.n_clients, (
+                f"cohort_k={self.cohort_k} not in "
+                f"[1, n_clients={self.n_clients}]")
+            assert self.cohort_k == self.m, (
+                f"federated spec: m={self.m} must equal "
+                f"cohort_k={self.cohort_k} — the sim's worker slots hold "
+                f"the sampled cohort")
+            assert self.max_staleness == 0 and not self.elastic, \
+                "federated rounds are server-synchronous: no staleness, " \
+                "no elastic membership (churn comes from availability)"
+        else:
+            assert self.cohort_k == 0, \
+                "cohort_k without n_clients — set both or neither"
 
     # ---- derived models ---------------------------------------------------- #
     @property
@@ -147,6 +174,18 @@ class ClusterSpec:
         to the full membership ``m``; elastic runs pass the live count)."""
         return self.collective_model.all_reduce_time(
             nbytes, self.m if w is None else w)
+
+    @property
+    def sampling(self):
+        """The ``core.federated.ClientSampling`` spec of a federated
+        cluster (``n_clients > 0``), seeded by the cluster seed — the ONE
+        cohort schedule the round executor and the replay both draw from.
+        None on a conventional (always-on) cluster."""
+        if self.n_clients <= 0:
+            return None
+        from repro.core.federated import ClientSampling
+        return ClientSampling(self.n_clients, self.cohort_k, seed=self.seed,
+                              availability=self.availability)
 
     def speeds(self) -> Tuple[float, ...]:
         return self.rel_speeds if self.rel_speeds else (1.0,) * self.m

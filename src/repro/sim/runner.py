@@ -40,6 +40,11 @@ Byte counts are never re-derived analytically:
 * QSGD's wire size comes from ``repro.dist.compress.qsgd(s).nbytes`` —
   per-worker mode books ``nbytes`` × active workers (the real protocol),
   ``legacy`` the historical post-reduction single payload.
+* Federated methods (``fed_ho_sgd`` / ``fed_avg`` / ``fed_dropout_avg``,
+  on a ``ClusterSpec`` with ``n_clients``/``cohort_k``) replay every round
+  over a freshly sampled K-of-N client cohort with availability churn; the
+  collective is priced and booked at the LIVE cohort (per-client payload ×
+  |cohort|, never × N) straight from the executor's wire model.
 
 Failure injection does REAL checkpoint round-trips through
 ``repro.checkpoint``: the cluster periodically saves ``{params, state}``,
@@ -64,6 +69,7 @@ from repro.core import rounds as R
 from repro.core.baselines import (
     make_gossip_pa_sgd, make_pa_sgd, make_qsgd, make_ri_sgd,
 )
+from repro.core import federated as F
 from repro.core.distributed import make_fo_step, make_zo_step
 from repro.core.ho_sgd import HOSGDConfig
 from repro.dist import CommLedger
@@ -250,6 +256,20 @@ def simulate(
     if use_pw:
         assert sm.executor is not None, \
             f"per-worker replay needs a RoundProgram on method {sm.name!r}"
+    # federated partial participation: every round runs over a freshly
+    # sampled K-of-N client cohort (cluster.sampling's seeded schedule —
+    # the same draw the round executor makes), priced at the LIVE cohort
+    fed = sm.program.client_sampling if sm.program is not None else None
+    if fed is not None:
+        assert use_pw, ("federated client-sampling replay needs "
+                        "replay='per_worker' (the cohort IS the membership)")
+        assert cluster.m == fed.cohort_k, (
+            f"cluster m={cluster.m} must equal the program's "
+            f"cohort_k={fed.cohort_k}")
+        assert cluster.max_staleness == 0 and not cluster.elastic \
+            and cluster.fail_rate == 0, \
+            "federated rounds are server-synchronous: availability churn " \
+            "is the only membership dynamic"
     loop = EventLoop()
     clocks = WorkerClocks.start(cluster.m)
     rng = cluster.rng()
@@ -344,7 +364,18 @@ def simulate(
             else:
                 gate = 0.0
 
-            if use_pw:
+            cohort = None
+            if use_pw and fed is not None:
+                # federated replay: draw this round's live cohort (the same
+                # seeded schedule the executor would draw) and run ONLY the
+                # sampled clients; bytes are what the executor's wire model
+                # booked for the live cohort, never re-derived
+                cohort = list(fed.cohort_for(t))
+                new_params, new_state, metrics = sm.executor.run(
+                    t, params, state, cur_batch, workers=cohort, key=key)
+                comm_bytes = int(metrics["comm_bytes"])
+                assert int(metrics["order"]) == order, (sm.name, t, order)
+            elif use_pw:
                 # per-worker replay: the live membership's rounds run with
                 # the params each worker actually has.  On a synchronous
                 # full-membership round every view is current, so the round
@@ -382,9 +413,13 @@ def simulate(
             # the historical price, bit-identical).  Bytes are whatever the
             # replayed programs booked, never rescaled by overlap.
             cm = cluster.collective_model
-            w_live = len(active)
+            # the round's live membership: the sampled cohort occupies the
+            # first len(cohort) worker slots (slot i runs cohort[i]; slowdown
+            # draws stay per-SLOT so churn never shifts later draws)
+            live = active if cohort is None else list(range(len(cohort)))
+            w_live = len(live)
             buckets = sm.overlap_for(t, state)
-            dt_crit = max(dts[i] for i in active)
+            dt_crit = max(dts[i] for i in live)
             exposed_crit = exposed_comm_time(cm, comm_bytes, w_live,
                                              buckets, dt_crit)
             entries = trial = None
@@ -408,7 +443,7 @@ def simulate(
                 done_tent = max(e.end for e in entries)
             else:
                 done_tent = max(clocks.t[i] + dts[i]
-                                for i in active) + exposed_crit
+                                for i in live) + exposed_crit
 
             if next_fail < done_tent:
                 if cluster.elastic:
@@ -486,9 +521,13 @@ def simulate(
                                       max(e.start, e.t_done - hid), e.t_done,
                                       worker=e.worker, name="overlap")
             else:
-                round_start = min(clocks.t[i] for i in active)
+                round_start = min(clocks.t[i] for i in live)
                 done = barrier_all_reduce(loop, clocks, dts, exposed_crit,
-                                          active=active, nbytes=comm_bytes)
+                                          active=live, nbytes=comm_bytes)
+                if cohort is not None:
+                    # server round: every slot resumes at the commit — the
+                    # next cohort is dispatched from the committed params
+                    clocks.set_all(done)
                 # the bucketed collective's hidden share rides behind the
                 # round's compute, ending at the barrier point
                 hid = cm.all_reduce_time(comm_bytes, w_live) - exposed_crit
@@ -512,7 +551,7 @@ def simulate(
             res.losses.append(float(metrics["loss"]))
             res.orders.append(order)
             res.comm_bytes.append(comm_bytes)
-            res.active_counts.append(len(active))
+            res.active_counts.append(w_live)
             res.feval_cum.append(res.feval_s)
             if track_views:
                 phist[t] = params
@@ -664,6 +703,71 @@ def _averaging_baseline(
                      program=meth.program)
 
 
+def _federated_family(
+    loss_fn: Callable,
+    cluster: ClusterSpec,
+    *,
+    name: str,
+    tau: int,
+    lr: float,
+    zo_lr: Optional[float],
+    mu: float,
+    seed: int,
+    engine: str = "fused",
+    codec=None,
+    compress_mode: str = "per_worker",
+    local_steps: Optional[int] = None,
+    fed_dropout: float = 0.25,
+) -> SimMethod:
+    """The federated frontier's methods, all over the SAME sampled-cohort
+    schedule (``cluster.sampling``):
+
+    * ``fed_ho_sgd`` — HO-SGD with sampled-cohort rounds: the cohort's FO
+      gradients all-reduce every tau rounds, its ZO coefficients all-gather
+      in between (direction streams keyed on client identity survive the
+      sampling);
+    * ``fed_avg`` — FedAvg-style local-update averaging: each client runs
+      ``local_steps`` (default tau) local SGD steps and the server commits
+      the dataset-size-weighted ``masked_average`` of the uploaded models;
+    * ``fed_dropout_avg`` — FedDropoutAvg: same, but each client zeroes a
+      seeded ``fed_dropout`` fraction of its upload and the masked average
+      weighs only the coordinates that actually arrived.
+
+    Bytes always come from the round IR's wire model at the LIVE cohort
+    (the executor books them; the runner reads ``metrics["comm_bytes"]``),
+    so the ``StepCost`` byte slot is intentionally 0 here.
+    """
+    cs = cluster.sampling
+    assert cs is not None, (
+        f"{name!r} needs a federated ClusterSpec: set n_clients/cohort_k "
+        f"(and m = cohort_k)")
+    if name == "fed_ho_sgd":
+        ho = HOSGDConfig(tau=tau, mu=mu, m=cluster.m, lr=lr, zo_lr=zo_lr,
+                         seed=seed, engine=engine)
+        wire = R.Wire(codec, compress_mode, seed=seed)
+        program = R.ho_sgd_program(loss_fn, ho, name=name, wire=wire,
+                                   client_sampling=cs)
+
+        def costs_for(t, order):
+            if order == 1:
+                return StepCost(0.0, 1.0, 0)
+            return StepCost(2.0, 0.0, 0)
+    elif name in ("fed_avg", "fed_dropout_avg"):
+        H = local_steps if local_steps is not None else max(1, tau)
+        drop = fed_dropout if name == "fed_dropout_avg" else 0.0
+        wire = R.Wire(codec, "per_worker", seed=seed)
+        program = F.fed_avg_program(loss_fn, cs, lr=lr, local_steps=H,
+                                    dropout=drop, seed=seed, wire=wire,
+                                    name=name)
+
+        def costs_for(t, order):
+            return StepCost(0.0, float(H), 0)
+    else:
+        raise ValueError(name)
+    meth = R.to_method(program)
+    return SimMethod(name, meth.init, meth.step, costs_for, program=program)
+
+
 def make_sim_methods(
     loss_fn: Callable,
     params_like: Any,
@@ -682,6 +786,8 @@ def make_sim_methods(
     compress_mode: str = "per_worker",
     which: Optional[List[str]] = None,
     overlap_buckets: int = 1,
+    local_steps: Optional[int] = None,
+    fed_dropout: float = 0.25,
 ) -> Dict[str, SimMethod]:
     """Build the paper's method zoo as replayable ``SimMethod``s.
 
@@ -693,6 +799,11 @@ def make_sim_methods(
     (default: linear ramp 2 -> tau over 10*tau iters).  ``overlap_buckets``
     buckets the HO-family collectives (time only, never bytes); the
     averaging baselines keep the strict compute-then-communicate price.
+
+    The ``fed_*`` methods (``fed_ho_sgd``/``fed_avg``/``fed_dropout_avg``)
+    need a federated ``cluster`` (``n_clients``/``cohort_k`` set);
+    ``local_steps`` (default tau) and ``fed_dropout`` parameterize the
+    FedAvg-family local phase — see ``_federated_family``.
     """
     d = sum(int(x.size) for x in jax.tree.leaves(params_like))
     zo_lr = zo_lr if zo_lr is not None else lr * 30.0 / d
@@ -701,6 +812,8 @@ def make_sim_methods(
         lambda t: int(round(2 + (tau - 2) * min(t, horizon) / horizon)))
     kw = dict(lr=lr, mu=mu, seed=seed, engine=engine,
               compress_mode=compress_mode, overlap_buckets=overlap_buckets)
+    fkw = dict(lr=lr, mu=mu, seed=seed, engine=engine,
+               compress_mode=compress_mode)
     avg_kw = dict(tau=tau, lr=lr, compress_mode=compress_mode)
     builders: Dict[str, Callable[[], SimMethod]] = {
         "ho_sgd": lambda: _ho_family(
@@ -723,6 +836,16 @@ def make_sim_methods(
             "ri_sgd", loss_fn, params_like, cluster, mu_r=mu_r, **avg_kw),
         "qsgd": lambda: _averaging_baseline(
             "qsgd", loss_fn, params_like, cluster, qsgd_s=qsgd_s, **avg_kw),
+        "fed_ho_sgd": lambda: _federated_family(
+            loss_fn, cluster, name="fed_ho_sgd", tau=tau, zo_lr=zo_lr,
+            codec=codec, **fkw),
+        "fed_avg": lambda: _federated_family(
+            loss_fn, cluster, name="fed_avg", tau=tau, zo_lr=zo_lr,
+            codec=codec, local_steps=local_steps, **fkw),
+        "fed_dropout_avg": lambda: _federated_family(
+            loss_fn, cluster, name="fed_dropout_avg", tau=tau, zo_lr=zo_lr,
+            codec=codec, local_steps=local_steps, fed_dropout=fed_dropout,
+            **fkw),
     }
     names = which or list(builders)
     unknown = [n for n in names if n not in builders]

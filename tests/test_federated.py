@@ -1,0 +1,245 @@
+"""Federated partial-participation suite (ISSUE 9 acceptance).
+
+Pins the four federated contracts:
+
+* cohort determinism — the seeded K-of-N schedule (``ClientSampling``)
+  redraws bit-identical cohorts per (spec, t), bounds them correctly, and
+  availability churn keeps at least one survivor;
+* ledger pins — a ``masked_average`` round books per-client payload bytes
+  × |live cohort| (codec ∈ {none, qsgd}), never × N, identically in
+  ``metrics["comm_bytes"]`` and through a wrapped ``CommLedger``;
+* masked-average weighting — the FedDropoutAvg closed form (weight =
+  nonzero-mask × client dataset size, absent coordinates keep the server
+  value);
+* trajectory divergence — 1% participation genuinely diverges from full
+  participation, and the sim trace stays bit-identical per seed.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rounds as R
+from repro.core.federated import (
+    ClientSampling, cohort_shards, fed_avg_program,
+)
+from repro.dist import CommLedger
+from repro.dist.collectives import _tree_nbytes
+from repro.dist.compress import qsgd
+
+D, K, N = 24, 4, 64
+
+
+def quad_loss(params, batch):
+    return 0.5 * jnp.mean(jnp.sum((params["x"] - batch["t"]) ** 2, -1))
+
+
+def problem(rows=4 * K):
+    params = {"x": jnp.linspace(-1.0, 1.0, D, dtype=jnp.float32)}
+    batch = {"t": jnp.asarray(
+        np.random.default_rng(0).normal(size=(rows, D)), jnp.float32)}
+    return params, batch
+
+
+def spec(**kw):
+    kw.setdefault("n_clients", N)
+    kw.setdefault("cohort_k", K)
+    kw.setdefault("seed", 0)
+    return ClientSampling(**kw)
+
+
+# --------------------------------------------------------------------------- #
+# cohort determinism
+# --------------------------------------------------------------------------- #
+def test_cohort_schedule_is_seeded_and_bounded():
+    cs = spec(availability=0.8)
+    for t in range(20):
+        c = cs.cohort_for(t)
+        assert c == cs.cohort_for(t)                  # bit-identical redraw
+        assert 1 <= len(c) <= K                       # churn, >= 1 survivor
+        assert all(0 <= i < N for i in c)
+        assert list(c) == sorted(set(c))              # sorted, no repeats
+    # full availability: exactly K distinct clients every round
+    full = spec(availability=1.0)
+    assert all(len(full.cohort_for(t)) == K for t in range(20))
+    # the schedule actually varies over t and over seeds
+    assert len({full.cohort_for(t) for t in range(20)}) > 1
+    assert spec(seed=1).cohort_for(3) != spec(seed=2).cohort_for(3)
+
+
+def test_client_sizes_fixed_positive_and_seeded():
+    cs = spec()
+    sizes = cs.client_sizes()
+    assert sizes.shape == (N,) and (sizes >= 1).all()
+    assert np.array_equal(sizes, cs.client_sizes())
+    assert not np.array_equal(sizes, spec(seed=7).client_sizes())
+    w = cs.client_weights([3, 11])
+    assert np.array_equal(w, sizes[[3, 11]].astype(np.float64))
+
+
+def test_cohort_shards_are_identity_keyed():
+    """Client c's shard depends on (c, t) only — not on cohort position."""
+    cs = spec()
+    _, batch = problem()
+    a = cohort_shards(batch, [3, 9], 5, cs)
+    b = cohort_shards(batch, [9, 50], 5, cs)
+    assert jnp.array_equal(a["t"][1], b["t"][0])      # client 9 either way
+    c = cohort_shards(batch, [9], 6, cs)
+    assert not jnp.array_equal(b["t"][0], c["t"][0])  # but varies with t
+    assert a["t"].shape == (2, batch["t"].shape[0] // K, D)
+
+
+# --------------------------------------------------------------------------- #
+# masked-average closed form
+# --------------------------------------------------------------------------- #
+def test_masked_average_closed_form():
+    stacked = {"a": jnp.asarray([[2.0, 0.0, 0.0],
+                                 [4.0, 4.0, 0.0]], jnp.float32)}
+    avg, wsum = R.masked_average(stacked, [1.0, 3.0])
+    # coord 0: both sent -> (1*2 + 3*4) / (1+3); coord 1: only client 1
+    # (weight 3) sent -> 4; coord 2: nobody sent -> avg 0, wsum 0
+    np.testing.assert_allclose(np.asarray(avg["a"]), [3.5, 4.0, 0.0])
+    np.testing.assert_allclose(np.asarray(wsum["a"]), [4.0, 3.0, 0.0])
+
+
+def test_fed_avg_apply_keeps_server_value_where_nobody_sent():
+    """lr=0 + full dropout survivors: masked average of identical models is
+    the model; a coordinate every client dropped keeps the server value."""
+    params, batch = problem()
+    prog = fed_avg_program(quad_loss, spec(), lr=0.0, local_steps=2)
+    ex = R.RoundExecutor(prog)
+    p2, _, met = ex.run(0, params, prog.init(params), batch)
+    # lr=0, no dropout: every client uploads the unchanged model, the
+    # masked average reproduces it exactly
+    np.testing.assert_allclose(np.asarray(p2["x"]), np.asarray(params["x"]),
+                               rtol=1e-6)
+    assert met["n_live"] == K
+
+
+def test_masked_average_round_rejects_legacy_wire():
+    noop = lambda *a: None
+    with pytest.raises(AssertionError, match="per-client"):
+        R.Round("f", 1, "masked_average", noop, noop,
+                wire=R.Wire(qsgd(8), "legacy"))
+
+
+# --------------------------------------------------------------------------- #
+# ledger pins: bytes = per-client payload x |live cohort|, never x N
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("codec", [None, qsgd(8)])
+def test_cohort_bytes_booked_per_live_client(codec):
+    params, batch = problem()
+    cs = spec(availability=0.75, seed=3)
+    wire = R.Wire(codec) if codec is not None else None
+    prog = fed_avg_program(quad_loss, cs, lr=0.05, local_steps=2, wire=wire)
+    ex = R.RoundExecutor(prog)
+    ledger = CommLedger()
+    run = ledger.wrap("fed", lambda *a, **k: ex.run(*a, **k))
+    state = prog.init(params)
+    for t in range(4):
+        live = len(cs.cohort_for(t))
+        per = (_tree_nbytes(params) if codec is None
+               else codec.nbytes(D))
+        params, state, met = run(t, params, state, batch)
+        assert met["n_live"] == live
+        assert met["comm_bytes"] == per * live            # x |cohort|
+        assert ledger.bytes_per_step("fed") == per * live  # ledger-identical
+        assert met["comm_bytes"] < per * N                # never x N
+
+
+def test_fed_ho_zo_round_books_4_bytes_per_live_client():
+    from repro.core.ho_sgd import HOSGDConfig
+
+    params, batch = problem()
+    cs = spec(availability=0.75, seed=3)
+    ho = HOSGDConfig(tau=4, mu=1e-3, m=K, lr=0.05, zo_lr=0.01, seed=0)
+    prog = R.ho_sgd_program(quad_loss, ho, client_sampling=cs)
+    ex = R.RoundExecutor(prog)
+    state = prog.init(params)
+    p = params
+    for t in range(4):
+        p, state, met = ex.run(t, p, state, batch)
+        if met["order"] == 0:   # ZO: one fp32 coefficient per live client
+            assert met["comm_bytes"] == 4 * met["n_live"]
+            assert met["n_live"] == len(cs.cohort_for(t))
+
+
+# --------------------------------------------------------------------------- #
+# sim replay: determinism + participation divergence
+# --------------------------------------------------------------------------- #
+def _sim(cluster, method, iters=8, seed=0, tau=2):
+    from repro.data.synthetic import batches, make_classification
+    from repro.models.mlp import init_mlp_classifier, mlp_loss
+    from repro.sim import compute_model_for, make_sim_methods, simulate
+
+    ds = make_classification("acoustic", seed=0)
+    params = init_mlp_classifier(jax.random.key(0), ds.n_features,
+                                 ds.n_classes, hidden=8)
+    batch = cluster.m * 4
+    sm = make_sim_methods(mlp_loss, params, cluster, tau=tau, lr=0.05,
+                          seed=seed, local_steps=2, which=[method])[method]
+    compute = compute_model_for(params, cluster, batch // cluster.m)
+    return simulate(sm, params, batches(ds, batch, seed=0), cluster, iters,
+                    compute=compute)
+
+
+@pytest.mark.parametrize("method", ["fed_ho_sgd", "fed_avg",
+                                    "fed_dropout_avg"])
+def test_federated_sim_trace_bit_identical_per_seed(method):
+    from repro.sim import ClusterSpec
+
+    cl = ClusterSpec(m=K, flops_per_sec=1e9, alpha=1e-5, bandwidth=1e6,
+                     n_clients=N, cohort_k=K, availability=0.8, seed=0)
+    r1, r2 = _sim(cl, method), _sim(cl, method)
+    assert r1.trace == r2.trace
+    assert r1.losses == r2.losses and r1.comm_bytes == r2.comm_bytes
+    # a different cluster seed draws different cohorts -> different rounds
+    r3 = _sim(cl.with_(seed=1), method)
+    assert r3.losses != r1.losses or r3.comm_bytes != r1.comm_bytes
+
+
+def test_participation_divergence_1pct_vs_full():
+    """Sampling is not a repricing: a 2-of-64 cohort run genuinely diverges
+    from full participation (same data stream, same method, same seed)."""
+    from repro.sim import ClusterSpec
+
+    full = ClusterSpec(m=8, flops_per_sec=1e9, alpha=1e-5, bandwidth=1e6,
+                       n_clients=8, cohort_k=8, availability=1.0, seed=0)
+    part = ClusterSpec(m=2, flops_per_sec=1e9, alpha=1e-5, bandwidth=1e6,
+                       n_clients=64, cohort_k=2, availability=1.0, seed=0)
+    rf, rp = _sim(full, "fed_avg"), _sim(part, "fed_avg")
+    assert rf.losses != rp.losses
+    # and the partial run's bytes follow the small cohort
+    assert max(rp.active_counts) <= 2 < min(rf.active_counts)
+
+
+def test_federated_cluster_spec_validation():
+    from repro.sim import ClusterSpec
+
+    with pytest.raises(AssertionError):   # m must equal cohort_k
+        ClusterSpec(m=4, n_clients=64, cohort_k=8)
+    with pytest.raises(AssertionError):   # cohort needs a population
+        ClusterSpec(m=4, cohort_k=4)
+    with pytest.raises(AssertionError):   # availability in (0, 1]
+        ClusterSpec(m=4, n_clients=64, cohort_k=4, availability=0.0)
+    with pytest.raises(AssertionError):   # server-synchronous only
+        ClusterSpec(m=4, n_clients=64, cohort_k=4, max_staleness=2)
+    cl = ClusterSpec(m=4, n_clients=64, cohort_k=4, availability=0.9, seed=5)
+    cs = cl.sampling
+    assert (cs.n_clients, cs.cohort_k, cs.seed, cs.availability) == \
+        (64, 4, 5, 0.9)
+    assert ClusterSpec(m=4).sampling is None
+
+
+def test_topology_ceil_splits_non_divisible_membership():
+    """Sampled cohorts are not pod-divisible: workers_per_pod prices the
+    ceil split (like CollectiveModel.time_components) instead of aborting."""
+    from repro.sim import ClusterSpec, Topology
+
+    topo = Topology(pods=2)
+    assert topo.workers_per_pod(5) == 3
+    assert topo.workers_per_pod(4) == 2
+    assert topo.workers_per_pod(1) == 1
+    # a 2-pod cluster with an odd membership now constructs and prices
+    cl = ClusterSpec(m=5, topology=topo)
+    assert cl.collective_time(1024, w=3) > 0.0

@@ -334,3 +334,73 @@ def test_wire_modes_book_per_worker_vs_legacy_bytes():
     assert R.wire_nbytes(dense, payload, 4) == 4 * D
     gather = R.Round("r", 0, "all_gather", lambda *a: None, lambda *a: None)
     assert R.wire_nbytes(gather, {"c": jnp.zeros((), jnp.float32)}, 3) == 12
+
+
+# --------------------------------------------------------------------------- #
+# PR-9 regressions: executor cache keying + wire-codec collective matrix
+# --------------------------------------------------------------------------- #
+def test_executor_jit_cache_keyed_by_round_object():
+    """Regression: the executor's jit caches were keyed by ``id(rnd)``
+    without holding the round — a dynamically rebuilt round could alias a
+    dead round's id and silently run the STALE jitted local.  Build fresh
+    rounds in a loop (dropping each old one first so CPython reuses the
+    address) and pin that round ``i``'s local actually runs at step ``i``."""
+    import gc
+
+    def make_round(i):
+        def local(t, worker, model, shard):
+            return jnp.full((2,), float(i)), jnp.zeros(())
+
+        def apply(t, params, state, reduced, workers, aux):
+            return params, state, {"val": reduced[0, 0]}
+
+        return R.Round(f"c{i}", 1, "none", local, apply)
+
+    cell = {"rnd": None}
+    prog = R.RoundProgram(
+        "cache", 1, lambda p: {},
+        lambda t, state: R.RoundStep(cell["rnd"], t, {}),
+        lambda t: 0.0, lambda t: 0.0, lambda t: 0.0)
+    ex = R.RoundExecutor(prog)
+    params = {"x": jnp.zeros((2,), jnp.float32)}
+    batch = {"t": jnp.zeros((1, 2), jnp.float32)}
+    for i in range(20):
+        cell["rnd"] = None      # drop the old round so its id can be reused
+        gc.collect()
+        cell["rnd"] = make_round(i)
+        _, _, met = ex.run(0, params, {}, batch)
+        assert float(met["val"]) == float(i), \
+            f"stale jitted local: step {i} ran round {int(met['val'])}"
+
+
+def test_wire_codec_collective_matrix():
+    """Regression: ``wire_nbytes``/``reduce_payloads`` silently IGNORED the
+    wire codec on all_gather and tree_average rounds — a configured
+    compressor changed neither bytes nor math.  Now unsupported pairs
+    fail fast at construction and tree_average implements the codec."""
+    from repro.dist.compress import qsgd, signsgd
+
+    noop = lambda *a: None
+    # unsupported (collective, codec) pairs fail fast, naming the matrix
+    for coll in ("all_gather", "none"):
+        with pytest.raises(AssertionError, match="Wire codec"):
+            R.Round("r", 0, coll, noop, noop, wire=R.Wire(qsgd(8)))
+    # tree_average books the codec (per-worker and legacy modes)...
+    codec = qsgd(8)
+    payload = {"x": jnp.zeros((D,), jnp.float32)}
+    ta_pw = R.Round("r", 1, "tree_average", noop, noop,
+                    wire=R.Wire(codec, "per_worker"))
+    ta_lg = R.Round("r", 1, "tree_average", noop, noop,
+                    wire=R.Wire(codec, "legacy"))
+    assert R.wire_nbytes(ta_pw, payload, 4) == codec.nbytes(D) * 4
+    assert R.wire_nbytes(ta_lg, payload, 4) == codec.nbytes(D)
+    # ...and the reduction actually routes through the codec: a signsgd
+    # roundtrip per worker then mean != the plain mean the old code produced
+    sg = R.Round("r", 1, "tree_average", noop, noop,
+                 wire=R.Wire(signsgd(), "per_worker"))
+    stacked = jnp.asarray([[0.5, -2.0], [1.5, -0.25]], jnp.float32)
+    got = R.reduce_payloads(sg, stacked, [0, 1], jax.random.key(0))
+    # worker roundtrips: [1.25, -1.25] and [0.875, -0.875] -> mean
+    np.testing.assert_allclose(np.asarray(got), [1.0625, -1.0625], rtol=1e-6)
+    plain = np.asarray(jnp.mean(stacked, 0))
+    assert not np.allclose(np.asarray(got), plain)
