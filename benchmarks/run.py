@@ -6,7 +6,9 @@ Prints ``name,us_per_call,derived...`` CSV rows.  Sections:
             across tau and the FO-compressor zoo
   fig1    — adversarial-example generation (measured, Fig 1 + Table 2)
   fig2    — multiclass MLP training (measured, Fig 2)
-  kernels — Pallas kernel micro-benches + HBM-byte models
+  kernels — Pallas kernel micro-benches + HBM-byte models, plus the
+            per-engine ZO-round comparison (launch counts, commit-phase
+            HBM passes over d); emits root-level BENCH_kernels.json
   roofline— dry-run derived roofline terms (if artifacts exist)
   sim     — time-to-target-loss frontier on the simulated cluster
             (tau/m/straggler/topology axes plus the compress-mode axis:

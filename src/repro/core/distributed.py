@@ -253,7 +253,10 @@ def make_zo_step(
     The direction algebra itself lives in ``repro.core.engine`` — the
     backend is picked by ``ho.engine`` ('fused' keeps the direction out of
     program buffers; 'pallas' routes through the kernels; 'tree' is the
-    reference) and the params' sharding specs are threaded into the engine
+    reference; 'flat' packs the tree into one buffer and, with plain SGD on
+    unsharded params, fuses the whole round into two kernel families on the
+    auto-sharded branch) and the params' sharding specs are threaded into
+    the engine
     so every hash-generated leaf and accumulator carries a sharding
     constraint (without one the partitioner is free to replicate the full
     d-dim direction per device — 1.8 TB fp32 for arctic).
@@ -363,10 +366,54 @@ def lower_zo_round(
         loss = coll.note("pmean", jnp.mean(f0s), tag="loss", payload=False)
         return g_hat, loss
 
+    # Fused single-buffer path: engine='flat' + plain SGD + unsharded params
+    # on the auto-sharded branch (the kernels run per-device, so sharded
+    # meshes and the shard_map lowering keep the generic reconstruct-then-
+    # opt.apply path — same math, pinned by the equivalence suite).
+    fused_flat = (ho.engine == "flat" and opt.kind == "sgd"
+                  and param_specs_tree is None)
+
+    def zo_auto_flat(t, params, opt_state, batch):
+        """zo_auto semantics with the flat engine's fused kernels: the
+        packed buffer lives across the round, each perturb accumulates the
+        tree-wide ||v||^2 in its own launch, and the reconstruction + SGD
+        (+momentum) commit is one in-place kernel — the update vector never
+        exists in HBM.  Booked communication is identical to ``zo_auto``
+        (4*m coefficient bytes + the non-payload monitoring loss)."""
+        for x in jax.tree.leaves(batch):
+            assert x.shape[0] % m == 0, \
+                f"batch {x.shape} not divisible by m={m} workers"
+        eng = engine_for(params)
+        workers = jnp.arange(m, dtype=jnp.uint32)
+        stacked = jax.tree.map(
+            lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), batch)
+        buf = eng.pack(params)
+        cs, invs, f0s = [], [], []
+        for i in range(m):
+            b_i = jax.tree.map(lambda x: x[i], stacked)
+            f0 = loss_fn(params, b_i)
+            pbuf, ss = eng.fused_perturb_sumsq(buf, t, workers[i], ho.mu)
+            f1 = loss_fn(eng.unpack(pbuf), b_i)
+            cs.append(((eng.dim / ho.mu) * (f1 - f0)).astype(jnp.float32))
+            invs.append(jax.lax.rsqrt(ss + 1e-30))
+            f0s.append(f0)
+        cs = coll.note("all_gather", jnp.stack(cs), tag="zo_coeffs")
+        scaled = cs * jnp.stack(invs) * jnp.float32(ho.zo_scale / m)
+        loss = coll.note("pmean", jnp.mean(jnp.stack(f0s)), tag="loss",
+                         payload=False)
+        momentum = float(opt.hyper["momentum"])
+        mom = eng.pack(opt_state) if momentum else None
+        buf, mom = eng.fused_reconstruct_update(
+            buf, mom, t, workers, scaled, opt.hyper["schedule"](t), momentum)
+        opt_state = eng.unpack(mom, cast=False) if momentum else opt_state
+        return eng.unpack(buf), opt_state, loss
+
     def zo_step(t, params, opt_state, batch):
         if not wa:
             g_hat, loss = zo_single(t, params, batch)
         elif not compat.HAS_PARTIAL_AUTO_COLLECTIVES:
+            if fused_flat:
+                return zo_auto_flat(t, params, opt_state, batch)
             g_hat, loss = zo_auto(t, params, batch)
         else:
             params_specs = _replicated_specs(params)

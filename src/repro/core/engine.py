@@ -22,6 +22,12 @@ Backends
                ``kernels.ops`` Pallas kernels: the direction is regenerated
                inside the tile and never touches HBM; all m workers are
                reconstructed in one pass over the parameters.
+* ``flat``   — packs the tree into ONE contiguous block-aligned f32 buffer
+               and runs one multi-leaf kernel per primitive (vs one per
+               leaf), plus a fused step path (perturb+sumsq in one launch,
+               reconstruct+SGD-commit in one launch on donated buffers) used
+               by ``core.ho_sgd``/``core.distributed`` when the optimizer is
+               plain SGD(+momentum).
 
 Contract (see README §DirectionEngine)
 --------------------------------------
@@ -332,17 +338,158 @@ class PallasEngine(DirectionEngine):
 
 
 # --------------------------------------------------------------------------- #
+class FlatEngine(DirectionEngine):
+    """Packed single-buffer backend: the whole tree in one Pallas launch.
+
+    The parameter tree is packed once into a single contiguous f32 buffer
+    with every leaf padded to a multiple of ``block``, so each grid block
+    belongs to exactly one leaf; per-block ``(salt-index, counter-start,
+    valid-lanes, is-bf16)`` metadata is precomputed at construction.  The
+    hash identity is unchanged — leaf-local counters from 0, one salt per
+    ``(t, worker, leaf)`` — so the algebra matches the other backends.
+
+    * The standard primitives (``perturb``/``reconstruct``) pack, run ONE
+      kernel for the whole tree (vs one per leaf in ``pallas``), and unpack;
+      ``inv_norm`` stays the shared jnp reduction so the coefficients are
+      bit-identical across backends by construction.
+    * The fused step path (``pack``/``fused_perturb_sumsq``/
+      ``fused_reconstruct_update``) keeps the buffer packed across the whole
+      ZO round: the perturb pass accumulates the tree-wide ``sum(v^2)``
+      in the same launch (no separate inv-norm pass over d), and the
+      reconstruct pass applies the SGD(+momentum) update in-kernel with the
+      params/momentum buffers donated and aliased in place — the update
+      vector never exists in HBM.  The fused sumsq's blockwise reduction
+      order differs from the jnp reduction, so the fused step is
+      loss-equivalent (not bitwise) to the per-primitive path.
+
+    Like ``pallas``, kernels run per-device (interpret on CPU, Mosaic on
+    TPU) — use ``tree``/``fused`` for meshes where leaves are sharded.
+    """
+
+    name = "flat"
+
+    def __init__(self, params_like: Any, seed: int, *, specs: Any = None,
+                 acc_dtype: Any = "float32", block: int = 4096):
+        super().__init__(params_like, seed, specs=specs, acc_dtype=acc_dtype,
+                         block=block)
+        blk_leaf, blk_ctr, blk_nv, blk_bf16 = [], [], [], []
+        self.pad_offsets: List[int] = []   # leaf start in the PACKED buffer
+        off = 0
+        for i, n in enumerate(self.sizes):
+            self.pad_offsets.append(off)
+            nb = max(1, -(-n // block))    # scalars still occupy one block
+            for b in range(nb):
+                blk_leaf.append(i)
+                blk_ctr.append(b * block)
+                blk_nv.append(min(block, n - b * block))
+            off += nb * block
+        self.padded_dim = off
+        self._blk_leaf = jnp.asarray(blk_leaf, jnp.int32)
+        self._blk_ctr = jnp.asarray(blk_ctr, jnp.uint32)
+        self._blk_nv = jnp.asarray(blk_nv, jnp.int32)
+        self._blk_bf16 = jnp.asarray(
+            [1 if self.dtypes[i] == jnp.bfloat16 else 0 for i in blk_leaf],
+            jnp.int32)
+        self.n_blocks = len(blk_leaf)
+
+    # ---- packed-buffer layout ------------------------------------------- #
+    def pack(self, tree: Any) -> jax.Array:
+        """Tree -> (padded_dim,) contiguous f32 buffer (bf16 -> f32 exact)."""
+        parts = []
+        for i, x in enumerate(jax.tree.leaves(tree)):
+            flat = x.astype(jnp.float32).reshape(-1)
+            pad = -(-max(self.sizes[i], 1) // self.block) * self.block \
+                - self.sizes[i]
+            parts.append(jnp.pad(flat, (0, pad)) if pad else flat)
+        return jnp.concatenate(parts)
+
+    def unpack(self, buf: jax.Array, cast: bool = True) -> Any:
+        """(padded_dim,) buffer -> tree; ``cast`` restores leaf dtypes
+        (False returns fp32 leaves — update/momentum trees)."""
+        outs = []
+        for i, shape in enumerate(self.shapes):
+            off = self.pad_offsets[i]
+            leaf = buf[off:off + self.sizes[i]].reshape(shape)
+            if cast:
+                leaf = leaf.astype(self.dtypes[i])
+            outs.append(self._constrain(leaf, i))
+        return jax.tree.unflatten(self.treedef, outs)
+
+    def blk_salts(self, t, worker) -> jax.Array:
+        """(n_blocks,) uint32 — each block's leaf salt for (t, worker)."""
+        return jnp.stack(self.salts(t, worker))[self._blk_leaf]
+
+    def blk_salts_multi(self, t, workers) -> jax.Array:
+        """(n_blocks, m) uint32 — per-(block, worker) salts."""
+        m = int(workers.shape[0])
+        return jnp.stack(
+            [self.blk_salts(t, _as_worker(workers[i])) for i in range(m)],
+            axis=1)
+
+    # ---- standard primitives (pack -> one launch -> unpack) -------------- #
+    def perturb(self, params, t, worker, scale):
+        from repro.kernels import ops  # deferred: keeps core importable early
+
+        out = ops.zo_perturb_flat(
+            self.pack(params), self.blk_salts(t, worker), self._blk_ctr,
+            self._blk_nv, scale, block=self.block)
+        return self.unpack(out)
+
+    def _reconstruct(self, coeffs, t, workers):
+        from repro.kernels import ops
+
+        m = int(coeffs.shape[0])
+        invs = jnp.stack(
+            [self.inv_norm(t, _as_worker(workers[i])) for i in range(m)])
+        out = ops.zo_reconstruct_flat(
+            self.blk_salts_multi(t, workers), coeffs * invs, self._blk_ctr,
+            self._blk_nv, block=self.block, acc_dtype=str(self.acc_dtype))
+        return self.unpack(out, cast=False)
+
+    # ---- fused step path (buffer stays packed across the round) ---------- #
+    def fused_perturb_sumsq(self, buf: jax.Array, t, worker, mu
+                            ) -> Tuple[jax.Array, jax.Array]:
+        """One launch: ``(buf + mu*rsqrt(sumsq)*v, sumsq)`` — the inv-norm
+        pass over d disappears into the perturb's grid."""
+        from repro.kernels import ops
+
+        out, ss = ops.zo_perturb_sumsq(
+            buf, self.blk_salts(t, worker), self._blk_ctr, self._blk_nv, mu,
+            block=self.block)
+        return out, ss[0]
+
+    def fused_reconstruct_update(self, buf: jax.Array, mom, t, workers,
+                                 scaled_coeffs: jax.Array, lr,
+                                 momentum: float = 0.0):
+        """One launch: regenerate all m directions in registers, contract
+        with ``scaled_coeffs`` (= c_w * inv_norm_w * zo_scale / m), and
+        commit the SGD(+momentum) update in place (donated buffers).
+
+        Returns ``(buf', mom')``; ``mom'`` is None when ``mom`` is None.
+        """
+        from repro.kernels import ops
+
+        return ops.zo_reconstruct_update(
+            buf, mom, self.blk_salts_multi(t, workers), self._blk_ctr,
+            self._blk_nv, self._blk_bf16, scaled_coeffs, lr,
+            momentum=float(momentum), block=self.block,
+            acc_dtype=str(self.acc_dtype))
+
+
+# --------------------------------------------------------------------------- #
 ENGINES = {
     "tree": TreeEngine,
     "fused": FusedEngine,
     "pallas": PallasEngine,
+    "flat": FlatEngine,
 }
 
 
 def make_engine(name: str, params_like: Any, seed: int, *, specs: Any = None,
                 acc_dtype: Any = "float32", block: int = 4096
                 ) -> DirectionEngine:
-    """Build a DirectionEngine backend by name ('tree' | 'fused' | 'pallas')."""
+    """Build a DirectionEngine backend by name
+    ('tree' | 'fused' | 'pallas' | 'flat')."""
     try:
         cls = ENGINES[name]
     except KeyError:

@@ -39,9 +39,12 @@ class HOSGDConfig:
     # estimate is O(d)-noisy anyway) — beyond-paper memory lever (§Perf).
     acc_dtype: str = "float32"
     # DirectionEngine backend for the ZO direction algebra ('tree' | 'fused'
-    # | 'pallas'; see repro.core.engine).  All backends are numerically
-    # equivalent; 'fused' keeps the direction out of program buffers and its
-    # HLO O(1) in m, 'pallas' additionally keeps it out of HBM on TPU.
+    # | 'pallas' | 'flat'; see repro.core.engine).  All backends are
+    # numerically equivalent; 'fused' keeps the direction out of program
+    # buffers and its HLO O(1) in m, 'pallas' additionally keeps it out of
+    # HBM on TPU, and 'flat' packs the tree into one buffer and (for plain
+    # SGD) fuses the whole ZO round — perturb+sumsq in one launch,
+    # reconstruct+optimizer commit in one launch on donated buffers.
     engine: str = "fused"
 
     @property
@@ -91,16 +94,54 @@ def make_ho_sgd(
         deltas, opt_state = opt.update(grads, opt_state, params, t)
         return apply_deltas(params, deltas), opt_state, loss
 
+    # The flat engine's fused step path needs introspectable SGD semantics
+    # (the momentum update runs in-kernel); any other optimizer — or any
+    # other engine — takes the generic reconstruct-then-opt.apply path.
+    fused_flat = cfg.engine == "flat" and opt.kind == "sgd"
+
     @jax.jit
     def zo_step(t, params, opt_state, batch):
         """Eq. (4)-(6): per-worker scalar coefficients, shared reconstruction."""
         eng = make_engine(cfg.engine, params, cfg.seed, acc_dtype=cfg.acc_dtype)
         workers = jnp.arange(cfg.m, dtype=jnp.uint32)
+        if fused_flat:
+            return zo_step_flat(eng, workers, t, params, opt_state, batch)
         cs, f0s = eng.zo_coeffs(loss_fn, params, batch, t, workers, cfg.mu)
         g_hat = jax.tree.map(
             lambda a: a * (cfg.zo_scale / cfg.m), eng.reconstruct(cs, t))
         deltas, opt_state = opt.update(g_hat, opt_state, params, t)
         return apply_deltas(params, deltas), opt_state, jnp.mean(f0s)
+
+    def zo_step_flat(eng, workers, t, params, opt_state, batch):
+        """Single-buffer fused ZO round (engine='flat', plain SGD).
+
+        The packed buffer lives across the whole round: each worker's
+        perturb accumulates the tree-wide ||v||^2 in the same launch (no
+        separate inv-norm pass over d), and the reconstruction + SGD
+        (+momentum) commit is one in-place kernel on donated buffers — the
+        update vector never exists in HBM.  The kernel-side sumsq has a
+        different (blockwise) reduction order than the shared jnp one, so
+        this path is loss-equivalent — not bitwise — to the per-primitive
+        engines (pinned in tests/test_engine.py).
+        """
+        momentum = float(opt.hyper["momentum"])
+        buf = eng.pack(params)
+        cs, f0s = [], []
+        for i in range(cfg.m):
+            b_i = jax.tree.map(lambda x: x[i], batch)
+            f0 = loss_fn(params, b_i)
+            pbuf, ss = eng.fused_perturb_sumsq(buf, t, workers[i], cfg.mu)
+            f1 = loss_fn(eng.unpack(pbuf), b_i)
+            c = ((eng.dim / cfg.mu) * (f1 - f0)).astype(jnp.float32)
+            cs.append(c * jax.lax.rsqrt(ss + 1e-30))
+            f0s.append(f0)
+        scaled = jnp.stack(cs) * jnp.float32(cfg.zo_scale / cfg.m)
+        lr = opt.hyper["schedule"](t)
+        mom = eng.pack(opt_state) if momentum else None
+        buf, mom = eng.fused_reconstruct_update(
+            buf, mom, t, workers, scaled, lr, momentum)
+        opt_state = eng.unpack(mom, cast=False) if momentum else opt_state
+        return eng.unpack(buf), opt_state, jnp.mean(jnp.stack(f0s))
 
     def init(params):
         return opt.init(params)

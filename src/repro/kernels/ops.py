@@ -83,3 +83,39 @@ def zo_reconstruct(n: int, salts, coeffs, offset=0, block: int = 4096,
     return zo_k.zo_reconstruct(n, salts, coeffs, offset, block=block,
                                acc_dtype=jnp.dtype(acc_dtype),
                                interpret=INTERPRET)
+
+
+# ---- flat (packed multi-leaf) kernels: one launch for the whole tree ---- #
+
+@partial(jax.jit, static_argnames=("block",))
+def zo_perturb_flat(x, salts, ctrs, nvalid, scale, block: int = 4096):
+    return zo_k.zo_perturb_flat(x, salts, ctrs, nvalid, scale, block=block,
+                                interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block", "acc_dtype"))
+def zo_reconstruct_flat(salts, coeffs, ctrs, nvalid, block: int = 4096,
+                        acc_dtype="float32"):
+    return zo_k.zo_reconstruct_flat(salts, coeffs, ctrs, nvalid, block=block,
+                                    acc_dtype=jnp.dtype(acc_dtype),
+                                    interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def zo_perturb_sumsq(x, salts, ctrs, nvalid, mu, block: int = 4096):
+    return zo_k.zo_perturb_sumsq(x, salts, ctrs, nvalid, mu, block=block,
+                                 interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("momentum", "block", "acc_dtype"),
+         donate_argnums=(0, 1))
+def zo_reconstruct_update(p, mom, salts, ctrs, nvalid, bf16_mask, coeffs, lr,
+                          momentum: float = 0.0, block: int = 4096,
+                          acc_dtype="float32"):
+    """Fused reconstruct+SGD commit.  ``p``/``mom`` are donated (the kernel
+    aliases them in place); when called under an outer jit the donation is
+    simply inherited from the caller."""
+    return zo_k.zo_reconstruct_update(
+        p, mom, salts, ctrs, nvalid, bf16_mask, coeffs, lr,
+        momentum=momentum, block=block, acc_dtype=jnp.dtype(acc_dtype),
+        interpret=INTERPRET)

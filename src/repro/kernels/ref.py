@@ -83,3 +83,63 @@ def ref_zo_reconstruct(n: int, salts, coeffs, offset=0,
         g = gaussian_from_salt((n,), jnp.asarray(salts[w], jnp.uint32), offset)
         acc = (acc + coeffs[w] * g).astype(adt).astype(jnp.float32)
     return acc
+
+
+# --------------------------------------------------------------------------- #
+# flat (packed multi-leaf) oracles.  These consume the same per-block
+# metadata as the kernels — (salt, leaf-local counter start, valid lanes)
+# per block — and mirror the kernels' blockwise evaluation order exactly,
+# including the blockwise-sequential sumsq accumulation (which is why the
+# fused sumsq is only ulp-close, not bitwise-equal, to a whole-leaf jnp
+# reduction).
+# --------------------------------------------------------------------------- #
+def _ref_flat_gauss(salt, ctr, nvalid, block: int) -> jax.Array:
+    g = gaussian_from_salt((block,), jnp.asarray(salt, jnp.uint32),
+                           jnp.asarray(ctr, jnp.uint32))
+    return jnp.where(jnp.arange(block) < nvalid, g, 0.0)
+
+
+def ref_zo_perturb_sumsq(x, salts, ctrs, nvalid, mu, block: int):
+    """Oracle of the fused perturb+sumsq: returns ``(x_perturbed, sumsq)``."""
+    nb = int(salts.shape[0])
+    ss = jnp.float32(0.0)
+    gs = []
+    for b in range(nb):
+        g = _ref_flat_gauss(salts[b], ctrs[b], nvalid[b], block)
+        ss = ss + jnp.sum(g * g)
+        gs.append(g)
+    scale = jnp.float32(mu) * jax.lax.rsqrt(ss + 1e-30)
+    out = x.astype(jnp.float32) + scale * jnp.concatenate(gs)
+    return out, ss
+
+
+def ref_zo_reconstruct_update(p, mom, salts, ctrs, nvalid, bf16_mask, coeffs,
+                              lr, momentum: float = 0.0, block: int = 4096,
+                              acc_dtype=jnp.float32):
+    """Oracle of the fused reconstruct + SGD(+momentum) commit.
+
+    Returns ``(p', mom')`` with ``mom'`` None when ``mom`` is None,
+    mirroring ``zo_reconstruct_update``: per-worker acc_dtype rounding,
+    masked padding lanes, bf16 leaves rounded through bf16 on commit.
+    """
+    adt = jnp.dtype(acc_dtype)
+    nb, m = salts.shape
+    upd = []
+    for b in range(int(nb)):
+        acc = jnp.zeros((block,), jnp.float32)
+        for w in range(int(m)):
+            g = gaussian_from_salt((block,), jnp.asarray(salts[b, w], jnp.uint32),
+                                   jnp.asarray(ctrs[b], jnp.uint32))
+            acc = (acc + coeffs[w] * g).astype(adt).astype(jnp.float32)
+        upd.append(jnp.where(jnp.arange(block) < nvalid[b], acc, 0.0))
+    g_full = jnp.concatenate(upd)
+    neg_lr = -jnp.float32(lr)
+    if mom is not None:
+        v_new = jnp.float32(momentum) * mom.astype(jnp.float32) + g_full
+        p_new = p.astype(jnp.float32) + neg_lr * v_new
+    else:
+        v_new = None
+        p_new = p.astype(jnp.float32) + neg_lr * g_full
+    bf = jnp.repeat(jnp.asarray(bf16_mask) != 0, block)
+    p_new = jnp.where(bf, p_new.astype(jnp.bfloat16).astype(jnp.float32), p_new)
+    return p_new, v_new

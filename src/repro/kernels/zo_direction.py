@@ -13,6 +13,34 @@ so the direction never exists in HBM:
                        single pass over the parameters (m gaussians per
                        element generated in registers).
 
+The per-leaf kernels above take one ``(salt, offset)`` pair per call, so the
+optimizer hot path launches one kernel per parameter leaf.  The *flat*
+kernels below operate on the whole tree packed into ONE contiguous f32
+buffer with block-aligned leaves, consuming per-BLOCK metadata arrays
+(salt, leaf-local counter start, valid-lane count — built once by
+``repro.core.engine.FlatEngine``), so a full multi-leaf primitive is a
+single kernel launch:
+
+* ``zo_perturb_flat``     — one launch for the whole tree's perturbation.
+* ``zo_reconstruct_flat`` — one launch for the whole tree's m-worker
+                            reconstruction.
+* ``zo_perturb_sumsq``    — the fused perturb: a two-phase grid over the
+                            same call first accumulates the tree-wide
+                            ``sum(v^2)`` (zero HBM traffic — this is the
+                            ``zo_sumsq`` algebra, finally on the hot path),
+                            then writes ``x + mu * rsqrt(sumsq) * v`` with
+                            the scale computed in-kernel.  HBM traffic: one
+                            read + one write of x; the separate inv-norm
+                            pass over d disappears.
+* ``zo_reconstruct_update`` — the fused optimizer commit: regenerates all
+                            m directions in registers, applies the
+                            pre-scaled coefficients, and performs the
+                            SGD(+momentum) update in the same pass.  Params
+                            (and momentum) are read once and written once
+                            via ``input_output_aliases`` (in-place on the
+                            donated buffer); the update vector never exists
+                            in HBM.
+
 ``offset`` shifts the leaf-local hash counter: the optimizer hashes each
 leaf with its own salt and counters starting at 0, the grid shifts each
 block by ``i * block`` internally, and callers that split one leaf across
@@ -165,3 +193,274 @@ def zo_reconstruct(
         out_specs=pl.BlockSpec((block,), lambda i: (i,)),
         interpret=interpret,
     )(salts, coeffs, jnp.asarray([offset], jnp.uint32))
+
+
+# --------------------------------------------------------------------------- #
+# flat multi-leaf kernels: the whole tree in one packed buffer, one launch.
+#
+# Packed-buffer convention (repro.core.engine.FlatEngine): every leaf is
+# padded to a multiple of ``block`` so each grid block belongs to exactly
+# ONE leaf; per-block arrays carry that leaf's salt, the block's leaf-local
+# counter start (b * block within its leaf — the same shift the per-leaf
+# grid applies internally), and the number of valid lanes (tail blocks of a
+# leaf mask the padding).  Hash identity is therefore bit-compatible with
+# the per-leaf kernels and the jnp/tree backends: leaf-local counters from
+# 0, one salt per (t, worker, leaf).
+# --------------------------------------------------------------------------- #
+def _valid_lanes(nv_ref, block: int):
+    return jax.lax.iota(jnp.int32, block) < nv_ref[0]
+
+
+def _perturb_flat_kernel(x_ref, salt_ref, ctr_ref, nv_ref, scale_ref, o_ref,
+                         *, block: int):
+    g = _gauss_block(ctr_ref[0].astype(jnp.uint32), block,
+                     salt_ref[0].astype(jnp.uint32))
+    x = x_ref[...]
+    # padding lanes carry x through unchanged (zeros stay zeros)
+    o_ref[...] = jnp.where(_valid_lanes(nv_ref, block),
+                           x + scale_ref[0] * g, x)
+
+
+def zo_perturb_flat(
+    x: jax.Array,        # (P,) packed f32 parameter buffer (block-aligned)
+    salts: jax.Array,    # (nb,) uint32 — per-block leaf salt
+    ctrs: jax.Array,     # (nb,) uint32 — per-block leaf-local counter start
+    nvalid: jax.Array,   # (nb,) int32  — valid lanes per block
+    scale,               # mu * inv_norm (fp32 scalar, premultiplied)
+    block: int = 4096,
+    interpret: bool = True,
+) -> jax.Array:
+    """Whole-tree ``x + scale * v`` in ONE kernel launch (vs one per leaf)."""
+    nb = salts.shape[0]
+    assert x.shape[0] == nb * block, (x.shape, nb, block)
+    return pl.pallas_call(
+        functools.partial(_perturb_flat_kernel, block=block),
+        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(x, salts, ctrs, nvalid, jnp.asarray(scale, jnp.float32).reshape(1))
+
+
+def _reconstruct_flat_kernel(salts_ref, coeffs_ref, ctr_ref, nv_ref, o_ref,
+                             *, block: int, m: int, acc_dtype):
+    start = ctr_ref[0].astype(jnp.uint32)
+    acc = jnp.zeros((block,), jnp.float32)
+    for w in range(m):  # static worker unroll: m gaussians live in registers
+        g = _gauss_block(start, block, salts_ref[0, w].astype(jnp.uint32))
+        acc = acc + coeffs_ref[w] * g
+        if acc_dtype != jnp.float32:
+            acc = acc.astype(acc_dtype).astype(jnp.float32)
+    o_ref[...] = jnp.where(_valid_lanes(nv_ref, block), acc, 0.0)
+
+
+def zo_reconstruct_flat(
+    salts: jax.Array,    # (nb, m) uint32 — per-(block, worker) leaf salts
+    coeffs: jax.Array,   # (m,) fp32 — c_i * inv_norm_i, pre-scaled
+    ctrs: jax.Array,     # (nb,) uint32
+    nvalid: jax.Array,   # (nb,) int32
+    block: int = 4096,
+    acc_dtype=jnp.float32,
+    interpret: bool = True,
+) -> jax.Array:
+    """Whole-tree ``sum_i coeffs_i * v_i`` in ONE launch; padding lanes 0."""
+    nb, m = salts.shape
+    return pl.pallas_call(
+        functools.partial(_reconstruct_flat_kernel, block=block, m=m,
+                          acc_dtype=jnp.dtype(acc_dtype)),
+        out_shape=jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        interpret=interpret,
+    )(salts, coeffs, ctrs, nvalid)
+
+
+def _perturb_sumsq_kernel(x_ref, salt_ref, ctr_ref, nv_ref, mu_ref,
+                          o_ref, ss_ref, *, block: int):
+    p = pl.program_id(0)          # phase: 0 = accumulate sumsq, 1 = perturb
+    i = pl.program_id(1)
+
+    @pl.when((p == 0) & (i == 0))
+    def _():
+        ss_ref[...] = jnp.zeros_like(ss_ref)
+
+    g = _gauss_block(ctr_ref[0].astype(jnp.uint32), block,
+                     salt_ref[0].astype(jnp.uint32))
+    valid = _valid_lanes(nv_ref, block)
+
+    @pl.when(p == 0)
+    def _():
+        # tail mask: hash values exist for any counter, so padding lanes
+        # must be excluded from the reduction explicitly
+        ss_ref[0] += jnp.sum(jnp.where(valid, g * g, 0.0))
+
+    @pl.when(p == 1)
+    def _():
+        # the tree-wide sumsq is fully accumulated (the grid is sequential),
+        # so the unit-sphere scale is computed in-kernel — no separate
+        # inv-norm pass over d
+        scale = mu_ref[0] * jax.lax.rsqrt(ss_ref[0] + 1e-30)
+        x = x_ref[...]
+        o_ref[...] = jnp.where(valid, x + scale * g, x)
+
+
+def zo_perturb_sumsq(
+    x: jax.Array,        # (P,) packed f32 parameter buffer (block-aligned)
+    salts: jax.Array,    # (nb,) uint32 — per-block leaf salt
+    ctrs: jax.Array,     # (nb,) uint32
+    nvalid: jax.Array,   # (nb,) int32
+    mu,                  # smoothing parameter (fp32 scalar; NOT premultiplied)
+    block: int = 4096,
+    interpret: bool = True,
+) -> tuple:
+    """Fused ``(x + mu * rsqrt(sum v^2) * v, sum v^2)`` in one launch.
+
+    A two-phase grid over one call: phase 0 streams NO HBM data (the
+    direction is hash-generated) and accumulates the tree-wide ``sum(v^2)``
+    into the scalar output; phase 1 re-generates each block's gaussians,
+    reads x once and writes the perturbed buffer once with the scale
+    ``mu * rsqrt(sumsq + 1e-30)`` computed in-kernel.  Returns
+    ``(x_perturbed, sumsq)`` so the caller reuses the same ``inv_norm`` for
+    the reconstruction coefficients.
+
+    Note the kernel's blockwise-sequential reduction order differs from the
+    shared jnp reduction of ``DirectionEngine.sumsq``, so the perturbed
+    point may differ from the per-primitive path in the last ulp — the
+    fused-step seam documented in README §DirectionEngine.
+    """
+    nb = salts.shape[0]
+    assert x.shape[0] == nb * block, (x.shape, nb, block)
+    # phase 0 never consumes x / the output block: pin both to block 0
+    # (p * i) so no extra HBM pass happens during accumulation; phase 1
+    # rewrites block 0 first, so the phase-0 garbage write never survives.
+    return pl.pallas_call(
+        functools.partial(_perturb_sumsq_kernel, block=block),
+        out_shape=(jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+                   jax.ShapeDtypeStruct((1,), jnp.float32)),
+        grid=(2, nb),
+        in_specs=[
+            pl.BlockSpec((block,), lambda p, i: (p * i,)),
+            pl.BlockSpec((1,), lambda p, i: (i,)),
+            pl.BlockSpec((1,), lambda p, i: (i,)),
+            pl.BlockSpec((1,), lambda p, i: (i,)),
+            pl.BlockSpec((1,), lambda p, i: (0,)),
+        ],
+        out_specs=(pl.BlockSpec((block,), lambda p, i: (p * i,)),
+                   pl.BlockSpec((1,), lambda p, i: (0,))),
+        interpret=interpret,
+    )(x, salts, ctrs, nvalid, jnp.asarray(mu, jnp.float32).reshape(1))
+
+
+def _reconstruct_update_kernel(p_ref, *refs, block: int, m: int, acc_dtype,
+                               momentum: float, use_momentum: bool):
+    if use_momentum:
+        (v_ref, salts_ref, ctr_ref, nv_ref, bf16_ref, coeffs_ref, lr_ref,
+         po_ref, vo_ref) = refs
+    else:
+        (salts_ref, ctr_ref, nv_ref, bf16_ref, coeffs_ref, lr_ref,
+         po_ref) = refs
+    start = ctr_ref[0].astype(jnp.uint32)
+    acc = jnp.zeros((block,), jnp.float32)
+    for w in range(m):  # static worker unroll: m gaussians live in registers
+        g = _gauss_block(start, block, salts_ref[0, w].astype(jnp.uint32))
+        acc = acc + coeffs_ref[w] * g
+        if acc_dtype != jnp.float32:
+            # round after every worker — the exact semantics of the
+            # DirectionEngine accumulators (bit-identical under bf16 acc)
+            acc = acc.astype(acc_dtype).astype(jnp.float32)
+    # padding lanes contribute nothing: params/momentum padding stays 0
+    acc = jnp.where(_valid_lanes(nv_ref, block), acc, 0.0)
+    # optimizers.sgd computes deltas = -lr * v and apply_deltas adds them;
+    # mirror that expression shape (p + (-lr)*v, not p - lr*v) so XLA's FMA
+    # contraction matches the unfused path bit-for-bit
+    neg_lr = -lr_ref[0]
+    if use_momentum:
+        # optimizers.sgd: v' = momentum * v + g;  p' = p + (-lr) * v'
+        v_new = jnp.float32(momentum) * v_ref[...] + acc
+        vo_ref[...] = v_new
+        p_new = p_ref[...] + neg_lr * v_new
+    else:
+        p_new = p_ref[...] + neg_lr * acc
+    # leaves stored in bf16 round-trip through their dtype on commit, the
+    # apply_deltas semantics (per-block flag: each block is one leaf's)
+    p_bf16 = p_new.astype(jnp.bfloat16).astype(jnp.float32)
+    po_ref[...] = jnp.where(bf16_ref[0] != 0, p_bf16, p_new)
+
+
+def zo_reconstruct_update(
+    p: jax.Array,                  # (P,) packed f32 params (donated, aliased)
+    mom,                           # (P,) packed f32 momentum, or None
+    salts: jax.Array,              # (nb, m) uint32
+    ctrs: jax.Array,               # (nb,) uint32
+    nvalid: jax.Array,             # (nb,) int32
+    bf16_mask: jax.Array,          # (nb,) int32 — 1 where the leaf is bf16
+    coeffs: jax.Array,             # (m,) fp32 — fully pre-scaled
+    lr,                            # learning rate (fp32 scalar)
+    momentum: float = 0.0,
+    block: int = 4096,
+    acc_dtype=jnp.float32,
+    interpret: bool = True,
+):
+    """Fused reconstruct + SGD(+momentum) commit: the update vector never
+    exists in HBM.
+
+    One pass: per block, all m directions are regenerated in registers and
+    contracted with the pre-scaled ``coeffs`` (``c_i * inv_norm_i *
+    zo_scale / m``, with per-worker ``acc_dtype`` rounding), then the
+    SGD(+momentum) update runs in-kernel: params (and momentum) are read
+    once and written once, in place (``input_output_aliases``).  Returns
+    ``(p', mom')`` (``mom'`` is None when ``mom`` is None — the
+    momentum-free optimizer carries no state buffer).
+    """
+    nb, m = salts.shape
+    assert p.shape[0] == nb * block, (p.shape, nb, block)
+    use_momentum = mom is not None
+    kern = functools.partial(
+        _reconstruct_update_kernel, block=block, m=m,
+        acc_dtype=jnp.dtype(acc_dtype), momentum=float(momentum),
+        use_momentum=use_momentum)
+    blk = pl.BlockSpec((block,), lambda i: (i,))
+    meta_specs = [
+        pl.BlockSpec((1, m), lambda i: (i, 0)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((1,), lambda i: (i,)),
+        pl.BlockSpec((m,), lambda i: (0,)),
+        pl.BlockSpec((1,), lambda i: (0,)),
+    ]
+    lr_arr = jnp.asarray(lr, jnp.float32).reshape(1)
+    shape = jax.ShapeDtypeStruct((nb * block,), jnp.float32)
+    if use_momentum:
+        p_out, v_out = pl.pallas_call(
+            kern,
+            out_shape=(shape, shape),
+            grid=(nb,),
+            in_specs=[blk, blk] + meta_specs,
+            out_specs=(blk, blk),
+            input_output_aliases={0: 0, 1: 1},   # in-place: read+write once
+            interpret=interpret,
+        )(p, mom, salts, ctrs, nvalid, bf16_mask, coeffs, lr_arr)
+        return p_out, v_out
+    p_out = pl.pallas_call(
+        kern,
+        out_shape=shape,
+        grid=(nb,),
+        in_specs=[blk] + meta_specs,
+        out_specs=blk,
+        input_output_aliases={0: 0},             # in-place: read+write once
+        interpret=interpret,
+    )(p, salts, ctrs, nvalid, bf16_mask, coeffs, lr_arr)
+    return p_out, None

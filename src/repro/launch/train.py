@@ -79,9 +79,11 @@ def main(argv=None):
                          "gradient, the reducer decodes (wire = nbytes x m);"
                          " legacy: post-reduction decode(encode(mean))")
     ap.add_argument("--engine", default="fused",
-                    choices=["tree", "fused", "pallas"],
+                    choices=["tree", "fused", "pallas", "flat"],
                     help="DirectionEngine backend for the ZO direction "
-                         "algebra (repro.core.engine)")
+                         "algebra (repro.core.engine); 'flat' packs the "
+                         "tree into one buffer and fuses the ZO round for "
+                         "plain SGD")
     ap.add_argument("--fo-buckets", type=int, default=1,
                     help="chunk the FO gradient all-reduce into this many "
                          "independently-reducible buckets (bit-identical "

@@ -17,6 +17,13 @@ import jax.numpy as jnp
 class Optimizer(NamedTuple):
     init: Callable
     update: Callable  # (grads, state, params, t) -> (deltas, state)
+    # introspection for fused update paths (e.g. the flat engine's in-kernel
+    # SGD commit): ``kind`` names the update rule, ``hyper`` carries the
+    # hyperparameters a fused implementation needs ('schedule', 'momentum',
+    # ...).  Defaults keep hand-rolled Optimizers working unchanged — an
+    # unknown kind simply means "no fused path; use update + apply_deltas".
+    kind: str = "custom"
+    hyper: dict | None = None
 
 
 def _tree_zeros_like(tree):
@@ -70,7 +77,8 @@ def sgd(schedule, momentum: float = 0.0):
             deltas = jax.tree.map(lambda g: -lr * g.astype(jnp.float32), grads)
         return deltas, state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="sgd",
+                     hyper={"schedule": schedule, "momentum": float(momentum)})
 
 
 # --------------------------------------------------------------------------- #
@@ -95,7 +103,8 @@ def adam(schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8):
         )
         return deltas, (mu, nu)
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, kind="adam",
+                     hyper={"schedule": schedule, "b1": b1, "b2": b2, "eps": eps})
 
 
 def apply_deltas(params, deltas):

@@ -1,11 +1,17 @@
-"""DirectionEngine backend equivalence: tree == fused == pallas(interpret).
+"""DirectionEngine backend equivalence: tree == fused == pallas == flat.
 
-The engine contract (README §DirectionEngine) promises the three backends
+The engine contract (README §DirectionEngine) promises the backends
 evaluate the *identical* algebra: same hashed gaussians, same fp32
 elementwise expressions, same per-worker acc_dtype rounding.  With tiles
 covering whole leaves the outputs are bit-identical; with sub-leaf tiles
 XLA's shape-dependent transcendental vectorization can move the last ulp,
 so the tiled assertions allow a few-ulp tolerance.
+
+The ``flat`` backend additionally ships a fused single-buffer step path
+(perturb+sumsq in one launch, reconstruct+SGD commit in one launch) whose
+kernel-side sumsq has a different reduction order than the shared jnp one —
+that path is pinned loss-equivalent (rtol) to the ``fused`` engine rather
+than bitwise, with donation safety and the non-SGD fallback pinned here too.
 """
 import jax
 import jax.numpy as jnp
@@ -73,7 +79,7 @@ def test_perturb_bit_identical_across_backends(shapes, dtype):
         n: jax.jit(lambda p, e=e: e.perturb(p, T, w, scale))(params)
         for n, e in engines.items()
     }
-    for n in ("fused", "pallas"):
+    for n in ("fused", "pallas", "flat"):
         for a, b in zip(_leaves32(outs["tree"]), _leaves32(outs[n])):
             np.testing.assert_array_equal(a, b, err_msg=n)
     # and it actually perturbs: every (non-scalar) leaf moved
@@ -99,7 +105,7 @@ def test_zo_coeff_bit_identical_across_backends(shapes, dtype):
             lambda p, b, e=e: e.zo_coeff(loss_fn, p, b, T, jnp.uint32(0), 1e-2)
         )(params, target)
         outs[n] = (float(c), float(f0))
-    assert outs["tree"] == outs["fused"] == outs["pallas"], outs
+    assert outs["tree"] == outs["fused"] == outs["pallas"] == outs["flat"], outs
 
 
 @pytest.mark.parametrize("shapes", SHAPE_SETS)
@@ -120,7 +126,7 @@ def test_reconstruct_equivalent_across_backends(shapes, dtype, acc_dtype):
     cs = jnp.asarray([0.5, -1.0, 2.0, 0.1], jnp.float32)
     recs = {n: jax.jit(lambda e=e: e.reconstruct(cs, T))()
             for n, e in engines.items()}
-    for n in ("fused", "pallas"):
+    for n in ("fused", "pallas", "flat"):
         for a, b in zip(_leaves32(recs["tree"]), _leaves32(recs[n])):
             if acc_dtype == "bfloat16":
                 np.testing.assert_array_equal(a, b, err_msg=f"{n} acc={acc_dtype}")
@@ -129,13 +135,14 @@ def test_reconstruct_equivalent_across_backends(shapes, dtype, acc_dtype):
                                            err_msg=f"{n} acc={acc_dtype}")
 
 
+@pytest.mark.parametrize("backend", ["pallas", "flat"])
 @pytest.mark.parametrize("shapes", SHAPE_SETS)
-def test_tiled_pallas_matches_within_ulps(shapes):
+def test_tiled_kernel_backends_match_within_ulps(shapes, backend):
     """Sub-leaf tiles (tail-masked blocks) may differ from the whole-leaf
     evaluation only by XLA's shape-dependent transcendental rounding."""
     params = _params(shapes, jnp.float32)
-    whole = make_engine("pallas", params, SEED, block=WHOLE_LEAF_BLOCK)
-    tiled = make_engine("pallas", params, SEED, block=TILED_BLOCK)
+    whole = make_engine(backend, params, SEED, block=WHOLE_LEAF_BLOCK)
+    tiled = make_engine(backend, params, SEED, block=TILED_BLOCK)
     w = jnp.uint32(1)
     scale = jnp.float32(1e-2) * whole.inv_norm(T, w)
     a = jax.jit(lambda p: whole.perturb(p, T, w, scale))(params)
@@ -149,7 +156,7 @@ def test_tiled_pallas_matches_within_ulps(shapes):
         np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
 
 
-@pytest.mark.parametrize("backend", ["tree", "fused"])
+@pytest.mark.parametrize("backend", ["tree", "fused", "flat"])
 def test_vmapped_vs_unrolled_reconstruct(backend):
     params = _params(SHAPE_SETS[0], jnp.float32)
     eng = make_engine(backend, params, SEED)
@@ -310,3 +317,154 @@ def test_zo_step_memory_o_params_independent_of_m(engine):
 def test_unknown_engine_raises():
     with pytest.raises(ValueError, match="unknown direction engine"):
         make_engine("mosaic", {"x": jnp.zeros((3,))}, 0)
+
+
+# --------------------------------------------------------------------------- #
+# flat backend: packed buffer + fused single-buffer step path                  #
+# --------------------------------------------------------------------------- #
+
+def _quad_loss(p, b):
+    return 0.5 * jnp.mean(jnp.sum((p["x"] - b["t"]) ** 2, -1))
+
+
+def _quad_batches(m, B, d, seed=0):
+    rng = np.random.default_rng(seed)
+    while True:
+        yield {"t": (1.0 + 0.1 * rng.normal(size=(m * B, d))).astype(np.float32)}
+
+
+def test_flat_pack_unpack_roundtrip():
+    """pack/unpack is lossless through the block-padded fp32 buffer —
+    including scalar leaves and bf16 leaves (bf16 -> f32 -> bf16 is exact)."""
+    params = {
+        "w": jax.random.normal(KEY, (37, 3), jnp.float32),
+        "b": jnp.linspace(-1.0, 1.0, 129).astype(jnp.bfloat16),
+        "s": jnp.asarray(0.25, jnp.float32),
+    }
+    eng = make_engine("flat", params, SEED)
+    buf = eng.pack(params)
+    assert buf.dtype == jnp.float32 and buf.shape == (eng.padded_dim,)
+    assert eng.padded_dim % eng.block == 0
+    out = eng.unpack(buf)
+    assert jax.tree.structure(out) == jax.tree.structure(params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # cast=False keeps fp32 leaves (update / momentum trees)
+    for x in jax.tree.leaves(eng.unpack(buf, cast=False)):
+        assert x.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("momentum", [0.0, 0.9])
+def test_flat_fused_step_loss_equivalent_to_fused(momentum):
+    """ISSUE 10 acceptance: --engine flat is pinned loss-equivalent (rtol)
+    to --engine fused on a toy problem, with and without momentum.  Not
+    bitwise: the fused path consumes the kernel's blockwise sumsq, whose
+    reduction order differs from the shared jnp inv-norm."""
+    m, B, d = 4, 4, 63
+    p0 = {"x": jnp.zeros((d,))}
+    hists = {}
+    for name in ("fused", "flat"):
+        cfg = HOSGDConfig(tau=1 << 30, mu=1e-3, m=m, lr=0.1, zo_lr=0.1 / d,
+                          engine=name, momentum=momentum)
+        hists[name] = run_method(make_ho_sgd(_quad_loss, cfg), p0,
+                                 _quad_batches(m, B, d), 12)
+    np.testing.assert_allclose(hists["flat"]["loss"], hists["fused"]["loss"],
+                               rtol=1e-4)
+    # the params pin is looser than the loss pin: the ulp-level sumsq
+    # difference enters each step scaled by (d/mu)*(f1-f0) and compounds
+    np.testing.assert_allclose(np.asarray(hists["flat"]["params"]["x"]),
+                               np.asarray(hists["fused"]["params"]["x"]),
+                               rtol=5e-3, atol=1e-5)
+
+
+def test_flat_fused_step_donation_safe():
+    """The fused commit kernel donates its packed buffers; the jitted step
+    must still leave the caller's params/opt_state usable (the donation is
+    of the *packed copy*, never of caller-visible arrays)."""
+    m, B, d = 2, 2, 37
+    p0 = {"x": jnp.linspace(-1.0, 1.0, d)}
+    cfg = HOSGDConfig(tau=1 << 30, mu=1e-3, m=m, lr=0.1, zo_lr=0.1 / d,
+                      engine="flat", momentum=0.9)
+    meth = make_ho_sgd(_quad_loss, cfg)
+    state = meth.init(p0)
+    batch = next(_quad_batches(m, B, d))
+    p1, s1, met1 = meth.step(1, p0, state, batch)
+    # same arrays again: donation must not have consumed them
+    assert not p0["x"].is_deleted()
+    p2, s2, met2 = meth.step(1, p0, state, batch)
+    np.testing.assert_array_equal(np.asarray(p1["x"]), np.asarray(p2["x"]))
+    assert float(met1["loss"]) == float(met2["loss"])
+
+
+def test_flat_fused_step_bf16_params():
+    """bf16 param leaves round-trip the packed fp32 buffer and are rounded
+    back to bf16 inside the commit kernel (bf16_mask path)."""
+    m, B, d = 2, 2, 37
+
+    def loss_fn(p, b):
+        x = p["x"].astype(jnp.float32)
+        return 0.5 * jnp.mean(jnp.sum((x - b["t"]) ** 2, -1)) \
+            + 0.5 * jnp.square(p["s"])
+
+    p0 = {"x": jnp.zeros((d,), jnp.bfloat16), "s": jnp.asarray(1.0)}
+    hists = {}
+    for name in ("fused", "flat"):
+        cfg = HOSGDConfig(tau=1 << 30, mu=1e-2, m=m, lr=0.1, zo_lr=0.1 / d,
+                          engine=name, momentum=0.9)
+        hists[name] = run_method(make_ho_sgd(loss_fn, cfg), p0,
+                                 _quad_batches(m, B, d), 5)
+    assert hists["flat"]["params"]["x"].dtype == jnp.bfloat16
+    assert hists["flat"]["params"]["s"].dtype == jnp.float32
+    # bf16 rounding of near-identical fp32 commits: bf16-eps agreement
+    np.testing.assert_allclose(
+        np.asarray(hists["flat"]["params"]["x"], np.float32),
+        np.asarray(hists["fused"]["params"]["x"], np.float32),
+        rtol=2e-2, atol=1e-3)
+    np.testing.assert_allclose(hists["flat"]["loss"], hists["fused"]["loss"],
+                               rtol=1e-3)
+
+
+def test_flat_nonsgd_optimizer_falls_back_to_generic_path():
+    """adam on flat takes the reconstruct-then-opt.apply path, which is the
+    shared engine contract — bit-identical to tree under a bf16 accumulator."""
+    from repro.opt.optimizers import adam, const_schedule
+
+    m, B, d = 2, 2, 63
+    p0 = {"x": jnp.zeros((d,))}
+    hists = {}
+    for name in ("tree", "flat"):
+        cfg = HOSGDConfig(tau=1 << 30, mu=1e-3, m=m, lr=0.05, zo_lr=0.05 / d,
+                          engine=name, acc_dtype="bfloat16")
+        meth = make_ho_sgd(_quad_loss, cfg, opt=adam(const_schedule(0.05)))
+        hists[name] = run_method(meth, p0, _quad_batches(m, B, d), 5)
+    np.testing.assert_array_equal(np.asarray(hists["tree"]["params"]["x"]),
+                                  np.asarray(hists["flat"]["params"]["x"]))
+    assert hists["tree"]["loss"] == hists["flat"]["loss"]
+
+
+def test_zo_step_flat_matches_fused_on_1x1_mesh():
+    """distributed make_zo_step: the flat fused path (zo_auto branch) is
+    loss/params-equivalent (rtol) to the fused engine's generic path."""
+    from repro import compat
+    from repro.core.distributed import make_zo_step
+    from repro.launch.mesh import make_test_mesh
+    from repro.opt.optimizers import const_schedule, sgd
+
+    d = 130
+    params = {"x": jnp.linspace(-1.0, 1.0, d)}
+    batch = {"t": jnp.ones((4, d), jnp.float32)}
+    mesh = make_test_mesh(data=1, model=1)
+    outs = {}
+    with compat.set_mesh(mesh):
+        for name in ("fused", "flat"):
+            ho = HOSGDConfig(tau=1 << 30, mu=1e-3, m=2, lr=0.05,
+                             zo_lr=0.05 / d, engine=name, momentum=0.9)
+            opt = sgd(const_schedule(ho.lr), ho.momentum)
+            zo = jax.jit(make_zo_step(_quad_loss, mesh, ho, opt, m=2))
+            p1, _, loss = zo(jnp.int32(3), params, opt.init(params), batch)
+            outs[name] = (np.asarray(p1["x"]), float(loss))
+    np.testing.assert_allclose(outs["flat"][0], outs["fused"][0],
+                               rtol=1e-5, atol=1e-7)
+    assert outs["flat"][1] == pytest.approx(outs["fused"][1], rel=1e-6)

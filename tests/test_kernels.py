@@ -162,6 +162,189 @@ def test_zo_reconstruct_acc_dtype(n, block):
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
+# --------------------------------------------------------------------------- #
+# flat (packed multi-leaf) kernels: block metadata sweeps + the fused commit
+# --------------------------------------------------------------------------- #
+# All bit-level comparisons hold jit-ness constant (jitted kernel vs jitted
+# oracle): XLA contracts a + s*b to fma under jit but not eagerly, so an
+# eager oracle differs in the last ulp for structural — not numerical —
+# reasons.
+
+FLAT_LAYOUTS = [
+    ([1000, 261], 256),   # tail blocks on both leaves
+    ([37, 3, 1], 8),      # tiny leaves incl. a scalar-sized one
+    ([129], 64),          # single leaf, odd tail
+]
+
+
+def _flat_meta(sizes, block, base_salt=100):
+    """Per-block (leaf salt, leaf-local counter start, valid lanes)."""
+    salts, ctrs, nvalid = [], [], []
+    for li, n in enumerate(sizes):
+        for b in range(max(1, -(-n // block))):
+            salts.append(base_salt + li)
+            ctrs.append(b * block)
+            nvalid.append(min(block, n - b * block))
+    return (jnp.asarray(salts, jnp.uint32), jnp.asarray(ctrs, jnp.uint32),
+            jnp.asarray(nvalid, jnp.int32))
+
+
+def _packed(sizes, block, key=KEY):
+    """Block-aligned packed buffer: leaf data, zero padding lanes."""
+    parts = []
+    for li, n in enumerate(sizes):
+        nb = max(1, -(-n // block))
+        x = jax.random.normal(jax.random.fold_in(key, li), (n,), jnp.float32)
+        parts.append(jnp.pad(x, (0, nb * block - n)))
+    return jnp.concatenate(parts)
+
+
+@pytest.mark.parametrize("sizes,block", FLAT_LAYOUTS)
+def test_zo_perturb_flat_sweep(sizes, block):
+    salts, ctrs, nvalid = _flat_meta(sizes, block)
+    x = _packed(sizes, block)
+    scale = jnp.float32(3e-3)
+    out = ops.zo_perturb_flat(x, salts, ctrs, nvalid, scale, block=block)
+
+    @jax.jit
+    def oracle(x, scale):
+        outs = []
+        for b in range(int(salts.shape[0])):
+            g = ref._ref_flat_gauss(salts[b], ctrs[b], nvalid[b], block)
+            xb = x[b * block:(b + 1) * block]
+            valid = jnp.arange(block) < nvalid[b]
+            outs.append(jnp.where(valid, xb + scale * g, xb))
+        return jnp.concatenate(outs)
+
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle(x, scale)))
+
+
+@pytest.mark.parametrize("sizes,block", FLAT_LAYOUTS)
+@pytest.mark.parametrize("acc_dtype", ["float32", "bfloat16"])
+def test_zo_reconstruct_flat_sweep(sizes, block, acc_dtype):
+    m = 4
+    salts1, ctrs, nvalid = _flat_meta(sizes, block)
+    msalts = jnp.stack([salts1 + jnp.uint32(w * 1009) for w in range(m)], axis=1)
+    coeffs = jnp.asarray([0.5, -1.0, 2.0, 0.1], jnp.float32)
+    out = ops.zo_reconstruct_flat(msalts, coeffs, ctrs, nvalid, block=block,
+                                  acc_dtype=acc_dtype)
+
+    @jax.jit
+    def oracle(coeffs):
+        adt = jnp.dtype(acc_dtype)
+        outs = []
+        for b in range(int(msalts.shape[0])):
+            acc = jnp.zeros((block,), jnp.float32)
+            for w in range(m):
+                g = ref._ref_flat_gauss(msalts[b, w], ctrs[b], nvalid[b], block)
+                acc = (acc + coeffs[w] * g).astype(adt).astype(jnp.float32)
+            outs.append(acc)
+        return jnp.concatenate(outs)
+
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(oracle(coeffs)))
+
+
+@pytest.mark.parametrize("sizes,block", FLAT_LAYOUTS)
+def test_zo_perturb_sumsq_matches_oracle(sizes, block):
+    """One launch = perturb AND the tree-wide sumsq (blockwise-sequential
+    accumulation, mirrored exactly by the oracle)."""
+    salts, ctrs, nvalid = _flat_meta(sizes, block)
+    x = _packed(sizes, block)
+    out, ss = ops.zo_perturb_sumsq(x, salts, ctrs, nvalid, 1e-3, block=block)
+    oracle = jax.jit(lambda x: ref.ref_zo_perturb_sumsq(
+        x, salts, ctrs, nvalid, 1e-3, block=block))
+    want, wss = oracle(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(ss).reshape(()), np.asarray(wss))
+    # padding lanes never contribute to the norm
+    g = (np.asarray(want) - np.asarray(x))
+    valid_total = sum(sizes)
+    assert np.count_nonzero(g) <= valid_total
+
+
+@pytest.mark.parametrize("momentum", [0.0, 0.9])
+def test_zo_reconstruct_update_matches_ref(momentum):
+    """Fused commit kernel vs its jnp oracle, incl. the bf16-leaf rounding
+    path (bf16_mask marks the second leaf's blocks)."""
+    sizes, block = [1000, 261], 256
+    salts1, ctrs, nvalid = _flat_meta(sizes, block)
+    m = 4
+    msalts = jnp.stack([salts1 + jnp.uint32(w * 613) for w in range(m)], axis=1)
+    # leaf 0 (4 blocks of 256) fp32; leaf 1 (2 blocks) commits through bf16
+    bf16 = jnp.asarray([0, 0, 0, 0, 1, 1], jnp.int32)
+    coeffs = jnp.asarray([0.25, -0.75, 1.5, 0.3], jnp.float32)
+    p = _packed(sizes, block)
+    mom = None if momentum == 0.0 else jnp.zeros_like(p) + 0.1
+    lr = 0.05
+    got_p, got_m = ops.zo_reconstruct_update(
+        p.copy(), None if mom is None else mom.copy(), msalts, ctrs, nvalid,
+        bf16, coeffs, lr, momentum=momentum, block=block)
+    oracle = jax.jit(lambda p, mom, c: ref.ref_zo_reconstruct_update(
+        p, mom, msalts, ctrs, nvalid, bf16, c, lr, momentum=momentum,
+        block=block))
+    want_p, want_m = oracle(p, mom, coeffs)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+    if momentum:
+        np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+    else:
+        assert got_m is None
+
+
+@pytest.mark.parametrize("m", [1, 4])
+@pytest.mark.parametrize("acc_dtype", ["float32", "bfloat16"])
+def test_zo_reconstruct_update_matches_opt_apply(m, acc_dtype):
+    """ISSUE 10 satellite pin: the fused commit kernel equals the unfused
+    composition ``apply_deltas ∘ sgd.update ∘ zo_reconstruct_flat`` across
+    momentum steps, m, accumulator dtypes, and uneven tail blocks.
+
+    The kernel commits ``p + (-lr)*v`` with the same multiply-add structure
+    the composition lowers to, so with both sides jitted the trajectories
+    are bit-identical (the ISSUE floor is ulp-bounded fp32 / bit-identical
+    bf16-acc; the structural match gives bitwise in both)."""
+    from repro.opt.optimizers import apply_deltas, const_schedule, sgd
+
+    sizes, block = [1000, 261], 256
+    salts1, ctrs, nvalid = _flat_meta(sizes, block)
+    msalts = jnp.stack([salts1 + jnp.uint32(w * 271) for w in range(m)], axis=1)
+    bf16 = jnp.zeros((salts1.shape[0],), jnp.int32)
+    lr, momentum = 0.05, 0.9
+    opt = sgd(const_schedule(lr), momentum)
+
+    @jax.jit
+    def step_unfused(p, state, coeffs, t):
+        g = ops.zo_reconstruct_flat(msalts, coeffs, ctrs, nvalid, block=block,
+                                    acc_dtype=acc_dtype)
+        deltas, state = opt.update(g, state, p, t)
+        return apply_deltas(p, deltas), state
+
+    p_ref = _packed(sizes, block)
+    state = opt.init(p_ref)
+    p_k, mom_k = p_ref, jnp.zeros_like(p_ref)
+    for t in range(3):
+        coeffs = jnp.linspace(-1.0, 1.0, m + 1)[1:] * jnp.float32(t + 1)
+        p_ref, state = step_unfused(p_ref, state, coeffs, t)
+        p_k, mom_k = ops.zo_reconstruct_update(
+            p_k, mom_k, msalts, ctrs, nvalid, bf16, coeffs, lr,
+            momentum=momentum, block=block, acc_dtype=acc_dtype)
+    np.testing.assert_array_equal(np.asarray(p_k), np.asarray(p_ref))
+    np.testing.assert_array_equal(np.asarray(mom_k), np.asarray(state))
+
+
+def test_zo_reconstruct_update_donates_eagerly():
+    """The commit op consumes its packed buffers in place (donation) — the
+    flat engine's fused step path relies on never re-reading them."""
+    sizes, block = [129], 64
+    salts1, ctrs, nvalid = _flat_meta(sizes, block)
+    msalts = salts1[:, None]
+    bf16 = jnp.zeros_like(nvalid)
+    p = _packed(sizes, block)
+    out, _ = ops.zo_reconstruct_update(
+        p, None, msalts, ctrs, nvalid, bf16,
+        jnp.ones((1,), jnp.float32), 0.1, block=block)
+    assert p.is_deleted()
+    assert not out.is_deleted()
+
+
 def test_zo_kernel_matches_optimizer_directions():
     """The Pallas hash is bit-identical to the optimizer's direction gen:
     perturbing leaf-by-leaf with the kernel == directions.sphere + axpy."""
